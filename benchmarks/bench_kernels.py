@@ -1,0 +1,51 @@
+"""Kernel µbenches: fused Pallas pass vs the unfused jnp reference.
+
+On this CPU container the Pallas kernels run in interpret mode, so wall
+times are NOT TPU-representative; the meaningful derived metric is the
+modelled HBM traffic (the fused kernels halve gradient-matrix reads).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shapes", default="256x256,1024x512,2917x256")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for spec in args.shapes.split(","):
+        m, n = map(int, spec.split("x"))
+        g = jax.random.normal(jax.random.PRNGKey(0), (m, n), jnp.float32)
+        jref = jax.jit(lambda g: ref.channel_norms_ref(g))
+        t_ref = time_call(jref, g)
+        emit(f"channel_norms_ref_{spec}", t_ref,
+             f"traffic={2*m*n*4}B (two passes)")
+        t_k = time_call(lambda g: ops.channel_norms(g), g)
+        emit(f"channel_norms_pallas_{spec}", t_k,
+             f"traffic={m*n*4}B (fused, interpret-mode timing)")
+
+        row, col = ref.channel_norms_ref(g)
+        thr = jnp.median(row[:, None] + col[None, :])
+        jref2 = jax.jit(lambda g, r, c: ref.select_mask_ref(g, r, c, thr))
+        emit(f"select_mask_ref_{spec}", time_call(jref2, g, row, col),
+             f"traffic={3*m*n*4}B (mask materialised)")
+        emit(f"select_mask_pallas_{spec}",
+             time_call(lambda: ops.select_mask(g, row, col, thr)),
+             f"traffic={2*m*n*4}B (fused)")
+
+        a = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
+        jref3 = jax.jit(lambda a: ref.apoz_counts_ref(a))
+        emit(f"apoz_ref_{spec}", time_call(jref3, a), "")
+        emit(f"apoz_pallas_{spec}", time_call(lambda: ops.apoz_counts(a)),
+             "interpret-mode timing")
+
+
+if __name__ == "__main__":
+    main()

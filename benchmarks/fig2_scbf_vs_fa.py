@@ -1,0 +1,83 @@
+"""Paper Fig. 2: SCBF vs Federated Averaging, with and without pruning.
+
+Runs the four methods on the synthetic cohort and reports per-loop
+AUC-ROC / AUC-PR plus the paper's §3 headline numbers.  ``--quick`` uses
+a reduced cohort (CI-sized); the full paper-scale run is
+``python -m benchmarks.fig2_scbf_vs_fa --loops 30``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro.config import ScbfConfig, TrainConfig
+from repro.core.scbf import run_federated
+from repro.data.medical import generate_cohort
+
+
+def run(quick: bool = True, loops: int = None, out: str = None,
+        methods=("scbf", "fedavg", "scbfwp", "fedavgwp"), seed: int = 0,
+        lr: float = 0.05, upload_rate: float = 0.10):
+    if quick:
+        cohort = generate_cohort(num_admissions=6000, num_medicines=400,
+                                 seed=seed)
+        feats = (400, 64, 16, 1)
+        loops = loops or 5
+    else:
+        cohort = generate_cohort(seed=seed)
+        feats = (2917, 256, 64, 1)
+        loops = loops or 30
+
+    results = {}
+    for method in methods:
+        base = method.replace("wp", "")
+        # the paper's server update SUMS the K masked client deltas
+        # (Algorithm 1) while FedAvg averages; scaling SCBF's local lr by
+        # 1/K gives both methods the same effective server step — without
+        # it the sum-update diverges at FA's stable lr (EXPERIMENTS.md
+        # §Paper-validation, note 2)
+        m_lr = lr / 5 if base == "scbf" else lr
+        cfg = TrainConfig(
+            learning_rate=m_lr, global_loops=loops, local_epochs=2,
+            local_batch_size=256, seed=seed,
+            scbf=ScbfConfig(upload_rate=upload_rate,
+                            num_clients=5, prune=method.endswith("wp")))
+        results[method] = run_federated(cohort, cfg, method=base,
+                                        mlp_features=feats, verbose=True)
+
+    summary = {}
+    for m, res in results.items():
+        summary[m] = {
+            "best_auc_roc": res.best("auc_roc"),
+            "best_auc_pr": res.best("auc_pr"),
+            "final_auc_roc": res.final.auc_roc,
+            "final_auc_pr": res.final.auc_pr,
+            "total_time_s": res.total_time(),
+            "total_upload_mb": res.total_upload_bytes() / 1e6,
+            "curve_auc_roc": [r.auc_roc for r in res.records],
+            "curve_auc_pr": [r.auc_pr for r in res.records],
+        }
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+    return results, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--loops", type=int, default=None)
+    ap.add_argument("--out", default="experiments/fig2_summary.json")
+    args = ap.parse_args()
+    _, summary = run(quick=not args.full, loops=args.loops, out=args.out)
+    for m, s in summary.items():
+        print(f"{m:10s} best ROC {s['best_auc_roc']:.4f} "
+              f"PR {s['best_auc_pr']:.4f} time {s['total_time_s']:.1f}s "
+              f"upload {s['total_upload_mb']:.1f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Aggregate dry-run JSON records into the §Roofline markdown table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        --dir experiments/dryrun [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    if not r["ok"]:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | "
+                f"| {r.get('error','')[:60]} |")
+    t = r["terms"]
+    dom = t["dominant"].replace("_s", "")
+    cp = r["collectives"].get("cross_pod_bytes", 0)
+    note = []
+    if r.get("window"):
+        note.append(f"win={r['window']}")
+    if r.get("federated"):
+        note.append("SCBF-fed")
+    if cp:
+        note.append(f"xpod={cp/1e9:.2f}GB")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{dom}** "
+            f"| {r['useful_flops_ratio']:.2f} | {' '.join(note)} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| dominant | useful_flops | notes |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = sum(1 for r in recs if r["ok"])
+    print(f"\n{ok}/{len(recs)} combinations compile")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper §3 time-efficiency claims: pruning saves ~57% of SCBF wall time
+(~48% for FA) with a ≤0.0047/0.0068 AUC reduction.
+
+Wall time on this CPU container includes jit recompiles after each prune
+step, so we report BOTH wall time and the compile-free FLOPs proxy
+(params × examples summed over loops) — the proxy is the
+hardware-independent statement of the claim.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.fig2_scbf_vs_fa import run as run_fig2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--loops", type=int, default=None)
+    args = ap.parse_args()
+    results, _ = run_fig2(quick=not args.full, loops=args.loops, out=None)
+
+    def totals(m):
+        res = results[m]
+        wall = res.total_time()
+        flops = sum(r.flops_proxy for r in res.records)
+        return wall, flops
+
+    print("method,wall_s,flops_proxy,auc_roc_best,auc_pr_best")
+    for m, res in results.items():
+        wall, flops = totals(m)
+        print(f"{m},{wall:.2f},{flops:.3e},{res.best('auc_roc'):.4f},"
+              f"{res.best('auc_pr'):.4f}")
+
+    for base in ("scbf", "fedavg"):
+        wp = base + "wp"
+        if base in results and wp in results:
+            w0, f0 = totals(base)
+            w1, f1 = totals(wp)
+            droc = results[base].best("auc_roc") - results[wp].best("auc_roc")
+            dpr = results[base].best("auc_pr") - results[wp].best("auc_pr")
+            print(f"{wp} vs {base}: wall saved {100*(1-w1/w0):.1f}% "
+                  f"flops saved {100*(1-f1/f0):.1f}% "
+                  f"d_auc_roc {droc:+.4f} d_auc_pr {dpr:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving of reduced assigned architectures (prefill + decode
+through the ring-buffer KV/SSM caches — the same code path the decode
+dry-run shapes lower on the production mesh).
+
+    PYTHONPATH=src python examples/serve_batched.py \
+        --archs qwen2-0.5b,mamba2-2.7b,chatglm3-6b --gen 16
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="qwen2-0.5b,mamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    for arch in args.archs.split(","):
+        print(f"=== {arch} ===", flush=True)
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--batch", str(args.batch),
+             "--prompt-len", str(args.prompt_len),
+             "--gen", str(args.gen)],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

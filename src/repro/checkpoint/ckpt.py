@@ -1,0 +1,58 @@
+"""Pytree checkpointing to a single .npz (host-side, flat key paths).
+
+Good enough for the federated experiments and examples; keys are
+'/'-joined tree paths, dtypes/shapes round-trip exactly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            arr = arr.astype(np.float32)      # bf16 -> f32 (lossless)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like``; returns (tree, step)."""
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    import jax.numpy as jnp
+    for path, leaf in paths_and_leaves:
+        key = "/".join(_path_str(p) for p in path)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,7 @@
+"""The paper's contribution: Stochastic Channel-Based Federated Learning."""
+from repro.core import channels, pruning, selection
+from repro.core.scbf import LoopRecord, RunResult, run_federated
+from repro.core.fedavg import run_fedavg
+from repro.core.server import fedavg_update, scbf_update
+from repro.core.client import client_delta, local_train
+from repro.core import privacy

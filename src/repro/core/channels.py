@@ -1,0 +1,219 @@
+"""Channel-norm algebra — the paper's §2.1 "Compute Channel Norms" step.
+
+A *channel* is a path through one neuron per layer of an L-layer network;
+its index is a vector i = [i1, …, iL].  The paper stores every channel's
+squared gradient norm in an L-dimensional tensor
+
+    T[i1, …, iL] = Σ_j (g_j^(i))²  .
+
+Key structural fact (which the paper does not exploit but we do): the
+channel norm is **separable** —
+
+    T[i1, …, iL] = Σ_{l=1..L} s_l[i_l],
+    s_l[i] = Σ_p G_l[p, i]² + (∂b_l[i])²
+
+where ``s_l[i]`` is the squared norm of all gradient entries *feeding*
+neuron i of layer l (its incoming-edge gradient column plus its bias
+gradient).  The l=1 term absorbs the input-edge gradients (the paper's
+g_0).  Separability gives us three things:
+
+  1. the exact tensor ``T`` is a broadcast-sum of L vectors (O(Π m_l)
+     memory only when materialised — fine for the paper's own MLP where
+     Π m_l = 256·64·1 = 16384);
+  2. an **implicit α-quantile** for large products via stochastic channel
+     sampling (this is where the method's name — *stochastic* — earns its
+     keep at scale);
+  3. an exact **edge-selection rule** without materialising T: an edge
+     (p→q) of layer l lies on some above-threshold channel iff the best
+     completion through the remaining layers clears the threshold:
+
+         s_{l-1}[p] + s_l[q] + Σ_{j∉{l-1,l}} max_i s_j[i]  >  q_α
+     (for l=1 only the s_1[q] + Σ_{j≠1} max term applies, since channel
+     indices do not include the input neuron).
+
+All scores are computed in fp32 regardless of gradient dtype.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Materialise T exactly up to this many channels; sample beyond it.
+MAX_MATERIALIZED = 1 << 22
+
+
+def layer_scores(grads: Sequence[dict],
+                 normalize: bool = False) -> List[jnp.ndarray]:
+    """Per-layer neuron scores s_l for an MLP gradient pytree.
+
+    ``grads`` is a sequence of {"w": (fan_in, fan_out), "b": (fan_out,)}.
+    Returns a list of L fp32 vectors, s_l of shape (m_l,).
+
+    ``normalize=True`` divides each layer's scores by their mean.  The
+    paper sums raw per-layer norms, which makes the selection sensitive
+    to inter-layer gradient scale (a layer whose scores have small spread
+    contributes nothing to the ranking, so selected channels spray across
+    its neurons and the edge-union balloons — see EXPERIMENTS.md
+    §Paper-validation note 3).  Normalisation is our beyond-paper option
+    that equalises the layers' influence.
+    """
+    scores = []
+    for g in grads:
+        w = g["w"].astype(jnp.float32)
+        s = jnp.sum(w * w, axis=0)
+        if "b" in g and g["b"] is not None:
+            b = g["b"].astype(jnp.float32)
+            s = s + b * b
+        if normalize:
+            s = s / jnp.maximum(jnp.mean(s), 1e-30)
+        scores.append(s)
+    return scores
+
+
+def materialize_channel_tensor(scores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """The exact L-dimensional channel-norm tensor T (broadcast sum)."""
+    L = len(scores)
+    t = jnp.zeros([1] * L, jnp.float32)
+    for l, s in enumerate(scores):
+        shape = [1] * L
+        shape[l] = s.shape[0]
+        t = t + s.reshape(shape)
+    return t
+
+
+def num_channels(scores: Sequence[jnp.ndarray]) -> int:
+    n = 1
+    for s in scores:
+        n *= int(s.shape[0])
+    return n
+
+
+def channel_quantile(scores: Sequence[jnp.ndarray], upload_rate: float,
+                     *, selection: str = "positive",
+                     key: jax.Array | None = None,
+                     num_samples: int = 1 << 16) -> jnp.ndarray:
+    """Threshold q such that ~``upload_rate`` of channels have T > q
+    (positive selection) or ~``upload_rate`` have T < q (negative).
+
+    Exact when the channel tensor is small enough to materialise;
+    stochastic (sampled channels) otherwise.
+    """
+    if selection not in ("positive", "negative"):
+        raise ValueError(f"selection must be positive|negative, got {selection}")
+    q = (1.0 - upload_rate) if selection == "positive" else upload_rate
+    if num_channels(scores) <= MAX_MATERIALIZED:
+        t = materialize_channel_tensor(scores).reshape(-1)
+        return jnp.quantile(t, q)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, len(scores))
+    sampled = jnp.zeros((num_samples,), jnp.float32)
+    for k, s in zip(keys, scores):
+        idx = jax.random.randint(k, (num_samples,), 0, s.shape[0])
+        sampled = sampled + s[idx]
+    return jnp.quantile(sampled, q)
+
+
+def max_completion(scores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Σ_l max_i s_l[i] — the best possible channel score."""
+    return sum(jnp.max(s) for s in scores)
+
+
+def apply_channel_mask(grads: Sequence[dict], scores: Sequence[jnp.ndarray],
+                       threshold: jnp.ndarray) -> Tuple[list, list]:
+    """Mask an MLP gradient pytree to the selected channels.
+
+    Returns (masked_grads, per_layer_bool_masks).  Masking uses the exact
+    edge rule; the pairwise combination s_{l-1}[p] + s_l[q] is evaluated
+    lazily as an outer sum so no (fan_in × fan_out) score matrix outlives
+    the mask computation.
+    """
+    L = len(scores)
+    maxes = jnp.stack([jnp.max(s) for s in scores])
+    total_max = jnp.sum(maxes)
+    masked, masks = [], []
+    for l, g in enumerate(grads):
+        w = g["w"]
+        if l == 0:
+            rest = total_max - maxes[0]
+            col_ok = scores[0] + rest > threshold               # (m_1,)
+            w_mask = jnp.broadcast_to(col_ok[None, :], w.shape)
+            b_mask = col_ok
+        else:
+            rest = total_max - maxes[l - 1] - maxes[l]
+            pair = scores[l - 1][:, None] + scores[l][None, :] + rest
+            w_mask = pair > threshold
+            # bias of neuron q is on a selected channel iff its best channel is
+            b_mask = (jnp.max(scores[l - 1]) + scores[l] + rest) > threshold
+        mg = {"w": jnp.where(w_mask, w, jnp.zeros_like(w))}
+        if "b" in g and g["b"] is not None:
+            mg["b"] = jnp.where(b_mask, g["b"], jnp.zeros_like(g["b"]))
+        masked.append(mg)
+        masks.append({"w": w_mask, "b": b_mask})
+    return masked, masks
+
+
+# ---------------------------------------------------------------------------
+# Factored channel scores for arbitrary pytrees (the at-scale adaptation —
+# DESIGN.md §3).  Channel == output feature of each weight tensor.
+# ---------------------------------------------------------------------------
+
+def factored_scores(grads) -> Tuple[list, list]:
+    """Per-tensor output-channel scores for any gradient pytree.
+
+    Returns (leaves, scores): for every leaf with ndim >= 2, the fp32
+    squared-norm over all axes except the last (the output-feature axis).
+    Leaves with ndim < 2 get ``None`` (always uploaded — they are the
+    norm/bias scalars, <0.1% of parameters).
+    """
+    leaves = jax.tree_util.tree_leaves(grads)
+    scores = []
+    for leaf in leaves:
+        if leaf.ndim >= 2:
+            g = leaf.astype(jnp.float32)
+            axes = tuple(range(leaf.ndim - 1))
+            scores.append(jnp.sum(g * g, axis=axes))
+        else:
+            scores.append(None)
+    return leaves, scores
+
+
+def factored_threshold(scores: Sequence, upload_rate: float,
+                       selection: str = "positive") -> jnp.ndarray:
+    """Global α-quantile across every tensor's channel-score pool."""
+    if upload_rate >= 1.0:
+        return jnp.asarray(-jnp.inf, jnp.float32)   # upload everything
+    pool = jnp.concatenate([s.reshape(-1) for s in scores if s is not None])
+    q = (1.0 - upload_rate) if selection == "positive" else upload_rate
+    return jnp.quantile(pool, q)
+
+
+def apply_factored_mask(grads, upload_rate: float,
+                        selection: str = "positive"):
+    """Mask a gradient pytree to its top-``upload_rate`` output channels.
+
+    Channel scores pool globally across tensors, so busier layers upload
+    more — the Law-of-Use-and-Disuse intuition at model scale.
+    Returns (masked_grads, uploaded_fraction).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    _, scores = factored_scores(grads)
+    thr = factored_threshold(scores, upload_rate, selection)
+    masked, kept, total = [], 0.0, 0.0
+    for leaf, s in zip(leaves, scores):
+        if s is None:
+            masked.append(leaf)
+            kept += leaf.size
+            total += leaf.size
+            continue
+        keep = s > thr                                         # (fan_out,)
+        m = jnp.where(keep, leaf.astype(jnp.float32),
+                      0.0).astype(leaf.dtype)
+        masked.append(m)
+        per_chan = leaf.size // s.shape[0]
+        kept += jnp.sum(keep) * per_chan
+        total += leaf.size
+    frac = kept / total
+    return jax.tree_util.tree_unflatten(treedef, masked), frac

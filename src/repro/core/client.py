@@ -1,0 +1,55 @@
+"""Local client training — paper Algorithm 1 "Train the client model".
+
+Each client runs plain minibatch SGD on its private shard for
+``local_epochs`` epochs and reports the *delta* G = W_after - W_before.
+The whole epoch is a ``lax.scan`` over pre-shuffled batches inside one
+jit, so per-loop Python overhead stays negligible even at 5 clients ×
+30 global loops (pruning changes shapes between loops, which simply
+retriggers jit's shape-keyed cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.metrics.auc import binary_cross_entropy
+from repro.models.mlp_net import mlp_forward
+
+
+def bce_loss(params, xb, yb):
+    return binary_cross_entropy(mlp_forward(params, xb), yb)
+
+
+@partial(jax.jit, static_argnames=("batch_size", "epochs"))
+def local_train(params: Tuple[dict, ...], x: jnp.ndarray, y: jnp.ndarray,
+                lr: float, key: jax.Array, batch_size: int = 256,
+                epochs: int = 1) -> Tuple[dict, ...]:
+    """SGD over the client shard; returns the updated params."""
+    n = (x.shape[0] // batch_size) * batch_size
+    grad_fn = jax.grad(bce_loss)
+
+    def one_epoch(params, key):
+        perm = jax.random.permutation(key, x.shape[0])[:n]
+        xb = x[perm].reshape(-1, batch_size, x.shape[1])
+        yb = y[perm].reshape(-1, batch_size)
+
+        def step(p, batch):
+            g = grad_fn(p, batch[0], batch[1])
+            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(step, params, (xb, yb))
+        return params, None
+
+    keys = jax.random.split(key, epochs)
+    params, _ = jax.lax.scan(one_epoch, params, keys)
+    return params
+
+
+def client_delta(params_before, params_after):
+    """The paper's gradient matrix G for one training loop."""
+    return jax.tree_util.tree_map(lambda a, b: a - b,
+                                  params_after, params_before)

@@ -1,0 +1,15 @@
+"""Federated Averaging baseline (McMahan et al. 2016) — the paper's
+comparator.  Thin wrapper over the shared orchestrator so both methods
+run the exact same local-training / evaluation / pruning code paths.
+"""
+from __future__ import annotations
+
+from repro.config import TrainConfig
+from repro.core.scbf import RunResult, run_federated
+from repro.data.medical import MedicalCohort
+
+
+def run_fedavg(cohort: MedicalCohort, train_cfg: TrainConfig,
+               verbose: bool = False, **kw) -> RunResult:
+    return run_federated(cohort, train_cfg, method="fedavg",
+                         verbose=verbose, **kw)

@@ -1,0 +1,61 @@
+"""Differential privacy on SCBF uploads — the paper's stated future work
+("Differential privacy could be further conducted on our models to
+evaluate the privacy-preserving ability quantitatively", §4).
+
+Gaussian mechanism on the *masked* client delta: clip the upload to an
+L2 bound S, add N(0, σ²S²) noise to the revealed entries only (masked
+entries stay exactly zero — the channel mask itself is the paper's
+primary privacy device; DP hardens what IS revealed).
+
+Accounting: per-loop (ε, δ) for the Gaussian mechanism via the classic
+bound σ = sqrt(2 ln(1.25/δ)) / ε, composed naively over loops (a tight
+RDP accountant is a drop-in upgrade; the naive bound is conservative).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_tree(tree, max_norm: float):
+    """Scale the whole pytree so its global L2 norm is <= max_norm."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float):
+    """Clip to max_norm and add N(0, (noise_multiplier*max_norm)^2) to the
+    non-zero (revealed) entries."""
+    clipped, _ = clip_tree(tree, max_norm)
+    leaves, treedef = jax.tree_util.tree_flatten(clipped)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    sigma = noise_multiplier * max_norm
+    for k, leaf in zip(keys, leaves):
+        noise = jax.random.normal(k, leaf.shape, jnp.float32) * sigma
+        mask = (leaf != 0)
+        out.append(jnp.where(mask, leaf.astype(jnp.float32) + noise,
+                             0.0).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def epsilon_for(noise_multiplier: float, delta: float = 1e-5,
+                loops: int = 1) -> float:
+    """Conservative (ε, δ) accounting: per-loop Gaussian-mechanism ε,
+    composed linearly over loops."""
+    if noise_multiplier <= 0:
+        return math.inf
+    eps_loop = math.sqrt(2.0 * math.log(1.25 / delta)) / noise_multiplier
+    return eps_loop * loops
+
+
+def sigma_for(epsilon: float, delta: float = 1e-5) -> float:
+    """Noise multiplier achieving (ε, δ) per loop."""
+    return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon

@@ -1,0 +1,75 @@
+"""Channel selection + upload accounting — paper §2.1 "Sort Norms" /
+"Process Gradients" / "Update Server" steps.
+
+``select_gradients`` is the full paper pipeline for the MLP family:
+layer scores → α-quantile threshold → exact edge masks → masked gradients.
+``upload_stats`` turns masks into the paper's §3 communication numbers
+(fraction of parameters revealed; bytes for dense vs. sparse encodings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channels
+
+
+@dataclass
+class UploadStats:
+    uploaded_params: int          # non-zero gradient entries uploaded
+    total_params: int
+    dense_bytes: int              # dense exchange (what FedAvg ships)
+    sparse_bytes: int             # (index, value) sparse encoding
+    upload_fraction: float
+
+    @classmethod
+    def from_masks(cls, masks: Sequence[dict]) -> "UploadStats":
+        up, total = 0, 0
+        for m in masks:
+            for v in m.values():
+                if v is None:
+                    continue
+                up += int(jnp.sum(v))
+                total += int(v.size)
+        dense = total * 4
+        sparse = up * (4 + 4)     # fp32 value + int32 flat index
+        return cls(up, total, dense, sparse, up / max(total, 1))
+
+
+def select_gradients(grads: Sequence[dict], upload_rate: float,
+                     selection: str = "positive",
+                     key: jax.Array | None = None,
+                     score_norm: bool = False
+                     ) -> Tuple[list, list, jnp.ndarray]:
+    """The paper's channel-selection pipeline for MLP gradients.
+
+    positive: upload channels with norm above the (1-α)-quantile (top α).
+    negative: discard channels below the α-quantile (upload the top 1-α).
+
+    Returns (masked_grads, masks, threshold).
+    """
+    scores = channels.layer_scores(grads, normalize=score_norm)
+    thr = channels.channel_quantile(scores, upload_rate,
+                                    selection=selection, key=key)
+    masked, masks = channels.apply_channel_mask(grads, scores, thr)
+    return masked, masks, thr
+
+
+def tree_sub(a, b):
+    """Gradient pytree a - b (the paper's G = W_after - W_before)."""
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, c):
+    return jax.tree_util.tree_map(lambda x: x * c, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)

@@ -1,0 +1,29 @@
+"""Central-server update rules.
+
+SCBF (paper Algorithm 1):      W <- W + Σ_k ΔW̃_k   (sum of masked deltas)
+Federated Averaging (McMahan): W <- Σ_k (n_k/n) W_k (weight average;
+equal client sizes here, so a plain mean).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def scbf_update(server_params, masked_deltas: Sequence):
+    """W <- W + Σ_k ΔW̃_k (the paper sums — it does not average)."""
+    total = masked_deltas[0]
+    for d in masked_deltas[1:]:
+        total = jax.tree_util.tree_map(jnp.add, total, d)
+    return jax.tree_util.tree_map(jnp.add, server_params, total)
+
+
+def fedavg_update(client_params: Sequence):
+    """W <- mean_k W_k (equal-size clients)."""
+    n = float(len(client_params))
+    summed = client_params[0]
+    for p in client_params[1:]:
+        summed = jax.tree_util.tree_map(jnp.add, summed, p)
+    return jax.tree_util.tree_map(lambda s: s / n, summed)

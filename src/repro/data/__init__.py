@@ -1,0 +1,3 @@
+from repro.data.medical import (
+    MedicalCohort, generate_cohort, federated_split, batch_iterator)
+from repro.data.tokens import synthetic_lm_batch, SyntheticTokenStream

@@ -1,0 +1,120 @@
+"""Synthetic medical cohort matching the paper's private dataset shape.
+
+Paper §2.2: 30,760 admissions, 2,917 distinct medicines, binary feature =
+"patient took medicine m after admission", binary label = mortality
+(alive/expired).  60% train / 10% validation / 30% test; the training set
+is split equally into 5 local client datasets.
+
+The hospital data is private, so this module *simulates the data gate*:
+
+* medicine popularity follows a power law (a few very common drugs, a
+  long tail), mean ~7 medicines per admission — typical of EHR medication
+  tables;
+* mortality comes from a planted sparse logistic model: ~150 medicines
+  carry non-zero risk weights (some protective, some high-risk — e.g.
+  pressors / comfort-care drugs correlate strongly with death in real
+  cohorts), plus a handful of pairwise interactions and label noise;
+* the weight scale is calibrated so a small MLP reaches AUC-ROC ≈ 0.97-0.98,
+  the paper's operating regime, making the SCBF-vs-FedAvg comparison
+  meaningful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class MedicalCohort:
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_val: np.ndarray
+    y_val: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def num_features(self) -> int:
+        return self.x_train.shape[1]
+
+
+def generate_cohort(num_admissions: int = 30760,
+                    num_medicines: int = 2917,
+                    num_risk_medicines: int = 150,
+                    num_interactions: int = 30,
+                    mean_meds: float = 7.0,
+                    label_noise: float = 0.01,
+                    signal_scale: float = 3.0,
+                    seed: int = 0) -> MedicalCohort:
+    """Generate the synthetic cohort (numpy; this is a host-side pipeline)."""
+    rng = np.random.default_rng(seed)
+
+    # power-law medicine popularity, scaled to the target mean count
+    pop = rng.pareto(1.2, size=num_medicines) + 1e-3
+    pop = pop / pop.sum() * mean_meds
+    pop = np.clip(pop, 0.0, 0.6)
+
+    x = (rng.random((num_admissions, num_medicines)) < pop[None, :])
+    x = x.astype(np.float32)
+
+    # planted sparse logistic risk model — risk concentrates on *popular*
+    # medicines (as in real EHR cohorts: pressors, opioids, comfort-care
+    # drugs are both common and strongly mortality-associated), so the
+    # signal actually fires on most admissions
+    num_risk_medicines = min(num_risk_medicines, num_medicines // 2)
+    risk_p = pop / pop.sum()
+    risk_idx = rng.choice(num_medicines, size=num_risk_medicines,
+                          replace=False, p=risk_p)
+    w = np.zeros(num_medicines, dtype=np.float32)
+    w[risk_idx] = rng.normal(0.0, 2.5, size=num_risk_medicines)
+
+    logits = x @ w
+    # pairwise interactions among risk medicines
+    for _ in range(num_interactions):
+        i, j = rng.choice(risk_idx, size=2, replace=False)
+        coef = rng.normal(0.0, 3.0)
+        logits += coef * x[:, i] * x[:, j]
+    logits += rng.normal(0.0, 0.3, size=num_admissions)   # unobserved factors
+    # center so mortality prevalence is realistic-ish but balanced enough
+    # for stable AUC-PR (paper's AUC-PR ~0.97 implies a fairly balanced set)
+    logits -= np.median(logits)
+    # sharpen: push p towards 0/1 so the Bayes ceiling matches the paper's
+    # ~0.98 AUC operating regime (label_noise below keeps it from being 1.0)
+    logits *= signal_scale
+    p = 1.0 / (1.0 + np.exp(-logits))
+    y = (rng.random(num_admissions) < p).astype(np.float32)
+    flip = rng.random(num_admissions) < label_noise
+    y = np.where(flip, 1.0 - y, y)
+
+    # 60 / 10 / 30 split (paper §2.2)
+    perm = rng.permutation(num_admissions)
+    n_train = int(0.6 * num_admissions)
+    n_val = int(0.1 * num_admissions)
+    tr, va, te = np.split(perm, [n_train, n_train + n_val])
+    return MedicalCohort(
+        x_train=x[tr], y_train=y[tr],
+        x_val=x[va], y_val=y[va],
+        x_test=x[te], y_test=y[te])
+
+
+def federated_split(x: np.ndarray, y: np.ndarray, num_clients: int = 5,
+                    seed: int = 0) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Equally divide the training set into ``num_clients`` local sets."""
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(x.shape[0])
+    n = (x.shape[0] // num_clients) * num_clients
+    idx = np.split(perm[:n], num_clients)
+    return [(x[i], y[i]) for i in idx]
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int,
+                   seed: int = 0, shuffle: bool = True
+                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """One epoch of minibatches (drops the ragged tail)."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(x.shape[0]) if shuffle else np.arange(x.shape[0])
+    for start in range(0, x.shape[0] - batch_size + 1, batch_size):
+        sel = order[start:start + batch_size]
+        yield x[sel], y[sel]

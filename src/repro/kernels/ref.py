@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the
+per-kernel shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def channel_norms_ref(g: jnp.ndarray):
+    """Row and column squared norms of a gradient matrix.
+
+    g (m, n) -> (row (m,), col (n,)) in fp32.
+    """
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf, axis=1), jnp.sum(gf * gf, axis=0)
+
+
+def select_mask_ref(g: jnp.ndarray, row_score: jnp.ndarray,
+                    col_score: jnp.ndarray, threshold) -> jnp.ndarray:
+    """Masked gradient: keep g[i,j] iff row_score[i]+col_score[j] > thr."""
+    keep = (row_score[:, None] + col_score[None, :]) > threshold
+    return jnp.where(keep, g, jnp.zeros_like(g))
+
+
+def apoz_counts_ref(acts: jnp.ndarray) -> jnp.ndarray:
+    """Count of exact zeros per neuron (column) — acts (batch, n) -> (n,)
+    int32.  APoZ = counts / batch."""
+    return jnp.sum((acts == 0).astype(jnp.int32), axis=0)
+
+
+def scbf_select_fused_ref(g: jnp.ndarray, row_score, col_score, threshold):
+    """Fused select + upload count: (masked_g, kept_entries:int32)."""
+    keep = (row_score[:, None] + col_score[None, :]) > threshold
+    masked = jnp.where(keep, g, jnp.zeros_like(g))
+    return masked, jnp.sum(keep.astype(jnp.int32))

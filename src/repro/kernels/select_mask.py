@@ -1,0 +1,70 @@
+"""Fused channel-selection kernel — the paper's "Process Gradients" step.
+
+Given per-row and per-column channel scores and the α-quantile threshold,
+rewrite each (BM, BN) gradient tile as
+
+    g̃[i,j] = g[i,j]   if row[i] + col[j] > threshold else 0
+
+and simultaneously count the kept entries (the upload-bytes statistic of
+EXPERIMENTS.md §Paper-validation).  Fusing the pairwise score test into
+the rewrite avoids materialising the (M, N) boolean mask in HBM — the
+jnp reference builds it, tripling traffic on large gradient matrices.
+
+The threshold arrives as a (1, 1) block in SMEM-style spec; the count
+accumulates in an int32 (1,) output visited by every grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+
+
+def _select_mask_kernel(thr_ref, g_ref, row_ref, col_ref, out_ref, cnt_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    thr = thr_ref[0]
+    keep = (row_ref[...][:, None] + col_ref[...][None, :]) > thr
+    g = g_ref[...]
+    out_ref[...] = jnp.where(keep, g, jnp.zeros_like(g))
+    cnt_ref[...] += jnp.sum(keep.astype(jnp.int32))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def select_mask_pallas(g: jnp.ndarray, row: jnp.ndarray, col: jnp.ndarray,
+                       threshold, bm: int = DEFAULT_BM,
+                       bn: int = DEFAULT_BN, interpret: bool = True):
+    """(masked g̃ like g, kept count (1,) int32)."""
+    m, n = g.shape
+    assert m % bm == 0 and n % bn == 0, (g.shape, bm, bn)
+    grid = (m // bm, n // bn)
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _select_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),           # threshold
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),     # g
+            pl.BlockSpec((bm,), lambda i, j: (i,)),          # row scores
+            pl.BlockSpec((bn,), lambda i, j: (j,)),          # col scores
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), g.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, g, row, col)

@@ -1,0 +1,304 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+The FIRST two lines below must run before ANY other import (jax locks the
+device count on first init).  Smoke tests and benches do NOT import this
+module, so they see the real single CPU device.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.config import INPUT_SHAPES, ShapeConfig, TrainConfig, ScbfConfig
+from repro.core.distributed import make_federated_train_step
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+from repro.models import model_zoo
+from repro.models import transformer as T
+from repro.sharding.rules import (ShardingRules, batch_spec, make_shard_fn,
+                                  param_shardings)
+
+# dense/quadratic archs run long_500k with this sliding window
+LONG_CONTEXT_WINDOW = 8192
+
+
+def _decode_window(cfg, shape: ShapeConfig) -> int:
+    if shape.name == "long_500k" and not cfg.supports_long_decode_natively:
+        return LONG_CONTEXT_WINDOW
+    return 0
+
+
+def _cache_in_shardings(specs, mesh, bspec):
+    """Shardings for the decode/prefill cache pytree (path-aware)."""
+    def spec_for(path, sds):
+        names = [getattr(p, "key", None) for p in path]
+        stacked = "stack" in names
+        leaf = names[-1]
+        lead = (None,) if stacked else ()
+        if leaf in ("k", "v"):
+            s = lead + (bspec, "model", None, None)
+        elif leaf in ("k_scale", "v_scale"):
+            s = lead + (bspec, "model", None)
+        elif leaf in ("ckv", "krope"):
+            s = lead + (bspec, "model", None)
+        elif leaf == "kpos":
+            s = lead + (bspec, "model")
+        elif leaf == "h":
+            s = lead + (bspec, "model", None, None)
+        elif leaf == "conv":
+            s = lead + (bspec, None, "model")
+        elif leaf == "ctx_tokens":
+            s = (bspec, None, None)
+        else:
+            s = tuple([None] * len(sds.shape))
+        # divisibility guard: replace non-divisible assignments with None
+        out = []
+        for dim, ax in zip(sds.shape, s):
+            if ax is None:
+                out.append(None)
+            else:
+                sizes = [mesh.shape[a] for a in
+                         (ax if isinstance(ax, tuple) else (ax,))]
+                n = int(np.prod(sizes))
+                out.append(ax if (dim % n == 0 and dim >= n) else None)
+        return NamedSharding(mesh, P(*out))
+    return jax.tree_util.tree_map_with_path(spec_for, specs)
+
+
+def _input_shardings(specs, mesh, shape: ShapeConfig, federated_k: int = 0):
+    bspec_p = batch_spec(mesh, shape.global_batch)
+    # unwrap P((axes,)) -> the axes entry for composing into larger specs
+    b = bspec_p[0] if len(bspec_p) else None
+
+    def leaf_spec(path, sds):
+        names = [getattr(p, "key", None) for p in path]
+        leaf = names[-1]
+        if "caches" in names:
+            return None  # handled by _cache_in_shardings
+        lead = ("pod",) if federated_k else ()
+        bb = ("data",) if federated_k else b
+        if leaf in ("tokens", "targets", "token", "pos"):
+            return NamedSharding(mesh, P(*lead, bb, None))
+        if leaf in ("audio_embeds", "image_embeds"):
+            return NamedSharding(mesh, P(*lead, bb, None, None))
+        return NamedSharding(mesh, P())
+
+    flat = jax.tree_util.tree_map_with_path(leaf_spec, specs)
+    if isinstance(specs, dict) and "caches" in specs:
+        flat["caches"] = _cache_in_shardings(specs["caches"], mesh, b)
+    return flat
+
+
+def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
+               federated: Optional[bool] = None,
+               compressed: bool = False,
+               q_chunk: int = 512,
+               kv_quant: bool = False,
+               fsdp: bool = True,
+               moe_dshard: bool = False,
+               moe_groups: int = 0,
+               extra_tag: str = "") -> Dict[str, Any]:
+    """Lower + compile one combination; returns the result record."""
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if federated is None:
+        federated = multi_pod and shape.kind == "train"
+
+    window = _decode_window(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "window": window,
+        "federated": bool(federated and shape.kind == "train"),
+        "compressed": compressed, "kv_quant": kv_quant, "fsdp": fsdp,
+        "q_chunk": q_chunk, "tag": extra_tag, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        batch_shardable = shape.global_batch >= 16
+        fed_train = bool(federated and shape.kind == "train")
+        shard_fn = make_shard_fn(
+            mesh, batch_shardable,
+            group_axes=("data",) if fed_train else None,
+            batch_override=("data",) if fed_train else None)
+        if moe_groups < 0:
+            moe_groups = 1       # explicit off
+        elif moe_groups == 0:    # default: match the batch-sharded axes
+            if federated and shape.kind == "train":
+                moe_groups = mesh.shape["data"]
+            elif batch_shardable:
+                moe_groups = int(np.prod(
+                    [mesh.shape[a] for a in mesh.axis_names
+                     if a in ("pod", "data")]))
+            else:
+                moe_groups = 1
+        bundle = model_zoo.build(cfg, shard=shard_fn, q_chunk=q_chunk,
+                                 kv_quant=kv_quant, moe_dshard=moe_dshard,
+                                 moe_groups=moe_groups)
+        rec["moe_groups"] = moe_groups
+
+        # --- param structs + shardings ---
+        captured = {}
+        def initfn(k):
+            p, a = T.init_model(cfg, k)
+            captured["axes"] = a
+            return p
+        p_sds = jax.eval_shape(initfn, jax.random.PRNGKey(0))
+        axes = captured["axes"]
+        p_shard = param_shardings(axes, mesh, ShardingRules(fsdp=fsdp),
+                                  shapes_tree=p_sds)
+
+        # --- inputs ---
+        specs = bundle.input_specs(shape, window=window)
+        fed_k = 0
+        if rec["federated"]:
+            fed_k = mesh.shape["pod"]
+            # leading client axis over pods
+            def add_k(s):
+                return jax.ShapeDtypeStruct(
+                    (fed_k, s.shape[0] // fed_k) + s.shape[1:], s.dtype)
+            specs = jax.tree_util.tree_map(add_k, specs)
+        in_sh = _input_shardings(specs, mesh, shape, federated_k=fed_k)
+
+        # --- step fn ---
+        if shape.kind == "train":
+            if rec["federated"]:
+                scbf = ScbfConfig(upload_rate=0.10,
+                                  compressed_exchange=compressed)
+                step = make_federated_train_step(
+                    lambda p, b: bundle.loss_fn(p, b, window=window), scbf,
+                    spmd_axis_name="pod")
+                out_sh = (None, p_shard)
+            else:
+                step = lambda p, b: bundle.train_step(p, b)
+                out_sh = (None, p_shard)
+        elif shape.kind == "prefill":
+            step = lambda p, b: bundle.prefill_step(p, b, window=window)
+            out_sh = None
+        else:
+            step = lambda p, b: bundle.decode_step(p, b, window=window)
+            out_sh = None
+
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(p_shard, in_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(p_sds, specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        # --- analyses ---
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        flops = float(cost.get("flops", 0.0))
+        byt = float(cost.get("bytes accessed", 0.0))
+        ma = compiled.memory_analysis()
+        mem = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                mem[f] = int(v)
+        # loop-aware static analysis of the partitioned module
+        # (cost_analysis counts while bodies once — see hlo_analysis.py)
+        hlo = compiled.as_text()
+        st = analyze(hlo)
+        terms = roofline_terms(st.flops, st.traffic_bytes,
+                               st.collective_bytes)
+
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+        chips = mesh.size
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "flops_per_dev": st.flops, "bytes_per_dev": st.traffic_bytes,
+            "raw_cost_analysis": {"flops": flops, "bytes": byt},
+            "memory": mem,
+            "collectives": st.as_dict(),
+            "terms": terms,
+            "tokens": tokens,
+            "model_flops_total": model_flops,
+            "useful_flops_ratio": (model_flops / (st.flops * chips)
+                                   if st.flops else 0.0),
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+            "chips": chips,
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--compressed", action="store_true",
+                    help="compressed SCBF cross-pod exchange (multi-pod train)")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (decode shapes)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate weights over the data axis")
+    ap.add_argument("--moe-dshard", action="store_true",
+                    help="d_model-sharded MoE dispatch/combine")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="grouped MoE routing (-1 off, 0 auto, N groups)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        for arch in configs.ASSIGNED:
+            for shape in INPUT_SHAPES:
+                combos.append((arch, shape, args.mesh))
+    else:
+        combos.append((args.arch, args.shape, args.mesh))
+
+    for arch, shape, mesh_kind in combos:
+        rec = dryrun_one(arch, shape, mesh_kind, compressed=args.compressed,
+                         q_chunk=args.q_chunk, kv_quant=args.kv_quant,
+                         fsdp=not args.no_fsdp,
+                         moe_dshard=args.moe_dshard,
+                         moe_groups=args.moe_groups, extra_tag=args.tag)
+        tag = f"_{args.tag}" if args.tag else ""
+        fname = f"{arch}_{shape}_{mesh_kind}{tag}.json"
+        with open(os.path.join(args.out, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = (f"dom={rec['terms']['dominant']}" if rec["ok"]
+                 else rec.get("error", "")[:120])
+        print(f"[{status}] {arch} {shape} {mesh_kind} "
+              f"({rec['total_s']}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

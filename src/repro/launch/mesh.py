@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everyone else
+sees the real single CPU device).
+
+Mesh semantics (DESIGN.md §5):
+  pod   — federated client axis (one pod = one hospital/client); SCBF's
+          channel-masked gradient exchange is the ONLY cross-pod traffic
+  data  — batch + FSDP weight sharding
+  model — tensor/expert parallelism
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for CPU smoke tests of the sharded code path."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,129 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+memory term     = HLO_bytes_per_device / HBM_bw
+collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` runs on the SPMD-partitioned (per-device) module, so
+its flops/bytes are already per-chip — the "/ chips" in the brief's
+formulas is folded in.  collective_bytes is NOT in cost_analysis: we parse
+the partitioned HLO text and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(start ops counted once, done ops skipped).  Best-effort classification of
+cross-pod traffic from explicit replica groups (devices 0..255 = pod 0).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.config import HARDWARE, HardwareConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of every array shape appearing in shape_str (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    total_bytes: int = 0
+    cross_pod_bytes: int = 0     # best-effort (explicit replica groups only)
+
+    def as_dict(self):
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes,
+                "cross_pod_bytes": self.cross_pod_bytes}
+
+
+def _crosses_pod(line: str, pod_stride: int = 256) -> Optional[bool]:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        try:
+            ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+            return len({i // pod_stride for i in ids}) > 1
+        except ValueError:
+            return None
+    # iota format: replica_groups=[G,S]<=[512] — group stride unknown;
+    # groups larger than one pod necessarily cross pods
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]", line)
+    if m:
+        g, s, total = map(int, m.groups())
+        if total <= pod_stride:
+            return False
+        if s > pod_stride:
+            return True
+        return None
+    return None
+
+
+def parse_collectives(hlo_text: str, pod_stride: int = 256
+                      ) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b([a-z0-9\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # output shape(s) precede the op name
+        shape_str = rhs[:opm.start()]
+        b = _shape_bytes(shape_str)
+        st.bytes_by_kind[base] = st.bytes_by_kind.get(base, 0) + b
+        st.count_by_kind[base] = st.count_by_kind.get(base, 0) + 1
+        st.total_bytes += b
+        cp = _crosses_pod(ls, pod_stride)
+        if cp:
+            st.cross_pod_bytes += b
+    return st
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float,
+                   hw: HardwareConfig = HARDWARE) -> Dict[str, float]:
+    compute = flops_per_dev / hw.peak_flops
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(compute, memory, collective)
+    terms["bound_fraction"] = (compute / total) if total > 0 else 0.0
+    return terms

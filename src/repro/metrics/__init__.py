@@ -1,0 +1,1 @@
+from repro.metrics.auc import auc_roc, auc_pr, binary_cross_entropy

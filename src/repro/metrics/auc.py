@@ -1,0 +1,71 @@
+"""Exact AUC-ROC and AUC-PR in pure jnp (sort-based, matches sklearn).
+
+The paper's evaluation is AUC-ROC / AUC-PR on a held-out test set; these
+are the two indicators of Fig. 2 and §3.
+
+Both metrics sort by score descending, accumulate TP/FP, and evaluate the
+curve only at tie-block end points (the threshold set), exactly like
+``sklearn.metrics.roc_auc_score`` / ``average_precision_score``.  The
+"previous threshold point" is recovered with an exclusive ``cummax`` over
+the masked (non-decreasing) coordinate, which keeps everything O(n log n)
+and jit-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _curve_points(scores, labels):
+    scores = scores.reshape(-1).astype(jnp.float32)
+    labels = labels.reshape(-1).astype(jnp.float32)
+    order = jnp.argsort(-scores)
+    s = scores[order]
+    y = labels[order]
+    tp = jnp.cumsum(y)
+    fp = jnp.cumsum(1.0 - y)
+    # threshold points: last index of each tied-score block
+    is_end = jnp.concatenate([s[:-1] != s[1:],
+                              jnp.ones((1,), dtype=bool)])
+    return tp, fp, is_end
+
+
+def _exclusive_cummax(x):
+    return jnp.concatenate([jnp.zeros((1,), x.dtype),
+                            jax.lax.cummax(x)[:-1]])
+
+
+def auc_roc(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Trapezoidal area under the ROC curve (tie-aware)."""
+    tp, fp, is_end = _curve_points(scores, labels)
+    pos = jnp.maximum(tp[-1], 1e-12)
+    neg = jnp.maximum(fp[-1], 1e-12)
+    tpr = tp / pos
+    fpr = fp / neg
+    tpr_m = jnp.where(is_end, tpr, 0.0)
+    fpr_m = jnp.where(is_end, fpr, 0.0)
+    prev_tpr = _exclusive_cummax(tpr_m)
+    prev_fpr = _exclusive_cummax(fpr_m)
+    area = jnp.where(is_end, (fpr - prev_fpr) * (tpr + prev_tpr) * 0.5, 0.0)
+    return jnp.sum(area).astype(jnp.float32)
+
+
+def auc_pr(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Average precision (step-wise interpolation, sklearn-compatible)."""
+    tp, fp, is_end = _curve_points(scores, labels)
+    pos = jnp.maximum(tp[-1], 1e-12)
+    precision = tp / jnp.maximum(tp + fp, 1e-12)
+    recall = tp / pos
+    recall_m = jnp.where(is_end, recall, 0.0)
+    prev_recall = _exclusive_cummax(recall_m)
+    ap = jnp.where(is_end, (recall - prev_recall) * precision, 0.0)
+    return jnp.sum(ap).astype(jnp.float32)
+
+
+def binary_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Numerically-stable mean BCE from logits."""
+    logits = logits.reshape(-1).astype(jnp.float32)
+    labels = labels.reshape(-1).astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

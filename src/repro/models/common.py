@@ -1,0 +1,86 @@
+"""Param construction helpers.
+
+Every init function builds TWO parallel pytrees with identical structure:
+``params`` (the arrays) and ``axes`` (logical axis names per array
+dimension, encoded as a comma-joined string leaf — strings are pytree
+leaves, tuples are not).  ``sharding/rules.py`` later maps logical axes
+onto the mesh.  Keeping both trees side by side in the same code path
+means they can never drift apart.
+
+Logical axis vocabulary:
+  layers   — stacked scan axis (never sharded)
+  vocab    — vocabulary dim
+  embed    — d_model
+  heads    — fused attention head output (H*hd)
+  kv       — fused KV head output (KV*hd)
+  mlp      — FFN intermediate
+  experts  — MoE expert axis
+  inner    — SSM d_inner
+  state    — SSM state dim
+  lora     — MLA compressed-KV dim
+  conv     — conv kernel tap axis
+  none     — never sharded
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def ax(*names: str) -> str:
+    return ",".join(names)
+
+
+def split_ax(axes: str):
+    return tuple(axes.split(",")) if axes else ()
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, fin: int, fout: int, axes: str,
+               dtype, bias: bool = False, scale: Optional[float] = None):
+    """(params, axes) for a dense layer.  fan-in scaled init.
+
+    ``axes`` e.g. "embed,mlp".
+    """
+    scale = scale if scale is not None else 1.0 / math.sqrt(fin)
+    p = {"w": trunc_normal(key, (fin, fout), scale, dtype)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((fout,), dtype)
+        a["b"] = split_ax(axes)[1]
+    return p, a
+
+
+def norm_init(dim: int, dtype, bias: bool = False):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    a = {"scale": "embed"}
+    if bias:
+        p["bias"] = jnp.zeros((dim,), dtype)
+        a["bias"] = "embed"
+    return p, a
+
+
+def stack_inits(init_fn, keys):
+    """vmap an (params, axes) init over a key batch; prepend 'layers'."""
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])
+    axes = jax.tree_util.tree_map(lambda a: "layers," + a if a else "layers",
+                                  axes)
+    return params, axes
+
+
+def merge(*pairs_named):
+    """merge(("attn", (p,a)), ("mlp", (p,a)), ...) -> (params, axes)."""
+    params, axes = {}, {}
+    for name, (p, a) in pairs_named:
+        params[name], axes[name] = p, a
+    return params, axes

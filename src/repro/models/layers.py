@@ -1,0 +1,438 @@
+"""Core transformer layers: norms, RoPE, GQA / MLA / cross attention, MLPs.
+
+Conventions
+-----------
+* every ``*_init`` returns ``(params, axes)`` (see models/common.py);
+* every ``*_apply`` takes ``(params, x, ctx, ...)`` and returns either
+  ``y`` or ``(y, new_cache)``;
+* ``ctx`` is a ``ModelCtx`` carrying the arch config, dtype and a
+  ``shard(x, logical_axes)`` callback — identity on CPU smoke tests, a
+  ``with_sharding_constraint`` under the production mesh;
+* attention is *query-chunked* with an explicit sharding constraint on
+  the (.., q_chunk, kv_len) score block, so 32k-token prefill compiles
+  with bounded per-device live memory (DESIGN.md §5);
+* decode caches are ring buffers ``{"k","v","kpos"}`` — ``kpos`` holds the
+  absolute position per slot (−1 = empty), which makes full-cache,
+  sliding-window and prefix-filled caches all mask uniformly.
+
+All softmax/norm math runs in fp32; activations stay in the model dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models.common import dense_init, merge, norm_init
+
+NEG_INF = -1e30
+
+
+@dataclass
+class ModelCtx:
+    cfg: ArchConfig
+    dtype: jnp.dtype
+    shard: Callable = lambda x, axes: x          # (array, logical axes) -> array
+    q_chunk: int = 512                           # attention query chunk
+    decode_window: int = 0                       # ring-buffer length override
+    kv_quant: bool = False                       # int8 KV cache (§Perf iter)
+    moe_dshard: bool = False                     # d_model-sharded MoE combine
+    moe_groups: int = 1                          # grouped (per-data-shard)
+                                                 # routing; 1 = global
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper §Perf optimization): store k/v
+# as int8 + per-(token, head) fp32 scale — halves decode's dominant
+# memory-roofline term (cache reads) at <0.5% attention error.
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x):
+    """x (B,S,KV,hd) -> (int8 values, (B,S,KV) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_apply(p, x):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + 1e-6)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_apply(p, x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + 1e-6)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_apply(p, x, kind: str):
+    return rmsnorm_apply(p, x) if kind == "rmsnorm" else layernorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (full / partial-dim "2d" / none)
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         fraction: float = 1.0) -> jnp.ndarray:
+    """Apply RoPE to x (..., S, H, hd) with positions (..., S).
+
+    fraction < 1 rotates only the first ``fraction*hd`` dims (ChatGLM's
+    2d RoPE); theta == 0 disables RoPE entirely (whisper).
+    """
+    if theta == 0.0:
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal absolute position embedding (whisper-style stub)."""
+    half = dim // 2
+    freq = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — query-chunked, fp32 softmax, window/causal masks
+# ---------------------------------------------------------------------------
+
+def _attend(q, k, v, kpos, qpos, ctx: ModelCtx, causal: bool, window: int):
+    """q (B,Sq,KV,G,hd); k,v (B,T,KV,hd); kpos (B,T) abs position or -1.
+
+    Returns (B,Sq,KV,G,hd).  Scores are sharded on the T axis ("kv_seq")
+    so 32k contexts keep per-device blocks bounded.
+    """
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = ctx.shard(s, ("batch", "none", "none", "none", "kv_seq"))
+    valid = (kpos[:, None, None, None, :] >= 0)
+    if causal:
+        rel = qpos[:, None, None, :, None] - kpos[:, None, None, None, :]
+        valid &= rel >= 0
+        if window:
+            valid &= rel < window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(v.dtype), v)
+    return o
+
+
+def attention_core(q, k, v, kpos, qpos, ctx: ModelCtx,
+                   causal: bool = True, window: int = 0):
+    """Query-chunked attention.  q (B,Sq,H,hd) grouped to KV heads."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    chunk = ctx.q_chunk
+    if Sq <= chunk or Sq % chunk:
+        o = _attend(qg, k, v, kpos, qpos, ctx, causal, window)
+        return o.reshape(B, Sq, H, hd)
+
+    nc = Sq // chunk
+    qc = qg.reshape(B, nc, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    pc = qpos.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    # remat the chunk: backward recomputes the (chunk × T) score block
+    # instead of stacking softmax residuals per chunk in HBM — the
+    # flash-attention memory profile (EXPERIMENTS.md §Perf, iter 1)
+    attend = jax.checkpoint(
+        lambda qi, pi: _attend(qi, k, v, kpos, pi, ctx, causal, window))
+
+    def body(_, qp):
+        qi, pi = qp
+        return None, attend(qi, pi)
+
+    _, oc = lax.scan(body, None, (qc, pc))
+    o = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, hd)
+    return o.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (with optional cross-attention mode)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype):
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    return merge(
+        ("q", dense_init(kq, D, H * hd, "embed,heads", dtype, cfg.qkv_bias)),
+        ("k", dense_init(kk, D, KV * hd, "embed,kv", dtype, cfg.qkv_bias)),
+        ("v", dense_init(kv_, D, KV * hd, "embed,kv", dtype, cfg.qkv_bias)),
+        ("o", dense_init(ko, H * hd, D, "heads,embed", dtype)),
+    )
+
+
+def _dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def gqa_apply(p, x, ctx: ModelCtx, positions, *, kv_x=None, kv_positions=None,
+              cache=None, causal=True, window: int = 0):
+    """Self- or cross-attention.
+
+    cache: {"k": (B,T,KV,hd), "v": ..., "kpos": (B,T)} ring buffer; when
+    given, x is the new token block written at ``positions``.
+    Returns (y, new_cache) (new_cache None for cache-less calls).
+    """
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = _dense(p["q"], x).reshape(B, S, H, hd)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = ctx.shard(q, ("batch", "none", "none", "none"))
+
+    if cache is not None and kv_x is not None and S == 1:
+        # cross-attention DECODE: reuse the K/V computed at prefill —
+        # recomputing them per generated token was 25× the useful decode
+        # FLOPs on whisper (§Perf iter 8)
+        k, v, kpos = cache["k"], cache["v"], cache["kpos"]
+        o = attention_core(q, k, v, kpos, positions, ctx, causal=False,
+                           window=0)
+        new_cache = cache
+    elif cache is None or kv_x is not None:
+        Skv = src.shape[1]
+        kpos = (jnp.broadcast_to(jnp.arange(Skv)[None], (B, Skv))
+                if kv_positions is None else kv_positions)
+        k = _dense(p["k"], src).reshape(B, Skv, KV, hd)
+        v = _dense(p["v"], src).reshape(B, Skv, KV, hd)
+        if kv_x is None:                      # self-attention gets RoPE
+            k = rope(k, kpos, cfg.rope_theta, cfg.rope_fraction)
+        k = ctx.shard(k, ("batch", "kv_seq", "none", "none"))
+        v = ctx.shard(v, ("batch", "kv_seq", "none", "none"))
+        o = attention_core(q, k, v, kpos, positions, ctx, causal, window)
+        # cross-attention PREFILL with a cache: store K/V for decode
+        new_cache = ({"k": k.astype(cache["k"].dtype),
+                      "v": v.astype(cache["v"].dtype), "kpos": kpos}
+                     if (cache is not None and kv_x is not None) else None)
+    else:
+        k_new = _dense(p["k"], src).reshape(B, S, KV, hd)
+        v_new = _dense(p["v"], src).reshape(B, S, KV, hd)
+        k_new = rope(k_new, positions, cfg.rope_theta, cfg.rope_fraction)
+        T = cache["k"].shape[1]
+        slot = positions % T                                  # ring buffer
+        if ctx.kv_quant:
+            kq, ks = quantize_kv(k_new)
+            vq, vs = quantize_kv(v_new)
+            kc = _ring_write(cache["k"], kq, slot)
+            vc = _ring_write(cache["v"], vq, slot)
+            ksc = _ring_write(cache["k_scale"], ks, slot)
+            vsc = _ring_write(cache["v_scale"], vs, slot)
+            kpos = _ring_write(cache["kpos"], positions, slot)
+            kc = ctx.shard(kc, ("batch", "kv_seq", "none", "none"))
+            vc = ctx.shard(vc, ("batch", "kv_seq", "none", "none"))
+            k = dequantize_kv(kc, ksc, x.dtype)
+            v = dequantize_kv(vc, vsc, x.dtype)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc,
+                         "v_scale": vsc, "kpos": kpos}
+        else:
+            k = _ring_write(cache["k"], k_new, slot)
+            v = _ring_write(cache["v"], v_new, slot)
+            kpos = _ring_write(cache["kpos"], positions, slot)
+            k = ctx.shard(k, ("batch", "kv_seq", "none", "none"))
+            v = ctx.shard(v, ("batch", "kv_seq", "none", "none"))
+            new_cache = {"k": k, "v": v, "kpos": kpos}
+        o = attention_core(q, k, v, kpos, positions, ctx, causal, window)
+
+    y = _dense(p["o"], o.reshape(B, S, H * hd))
+    return y, new_cache
+
+
+def _ring_write(buf, new, slot):
+    """Write new (B,S,...) into buf (B,T,...) at per-token slots (B,S)."""
+    B, S = slot.shape
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    return buf.at[bidx, slot].set(new.astype(buf.dtype))
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        "kpos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2), absorbed decode path
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kq, kd, ku, ko = jax.random.split(key, 4)
+    return merge(
+        # per-head query: nope part (hd) + rope part (rd)
+        ("q", dense_init(kq, D, H * (hd + rd), "embed,heads", dtype)),
+        # compressed kv (lora) + shared rope key
+        ("kv_down", dense_init(kd, D, r + rd, "embed,lora", dtype)),
+        # decompress: k_nope (hd) + v (hd) per head
+        ("kv_up", dense_init(ku, r, H * 2 * hd, "lora,heads", dtype)),
+        ("o", dense_init(ko, H * hd, D, "heads,embed", dtype)),
+    )
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+        "kpos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _mla_qkv(p, x, ctx, positions):
+    cfg = ctx.cfg
+    B, S, _ = x.shape
+    H, hd, rd, r = cfg.num_heads, cfg.head_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    q = _dense(p["q"], x).reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    down = _dense(p["kv_down"], x)                       # (B,S,r+rd)
+    ckv, krope = down[..., :r], down[..., r:]
+    krope = rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, krope
+
+
+def _mla_attend(q_nope, q_rope, ckv, krope, kpos, qpos, p, ctx):
+    """Absorbed MLA attention: scores in compressed (lora) space.
+
+    q_nope (B,S,H,hd), q_rope (B,S,H,rd); ckv (B,T,r), krope (B,T,rd).
+    """
+    cfg = ctx.cfg
+    B, S, H, hd = q_nope.shape
+    r = cfg.kv_lora_rank
+    wu = p["kv_up"]["w"].reshape(r, H, 2 * hd)
+    wk = wu[..., :hd]                                    # (r,H,hd)
+    wv = wu[..., hd:]                                    # (r,H,hd)
+    # absorb k-decompression into q:  q' = q_nope · wkᵀ  -> (B,S,H,r)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    scale = (hd + cfg.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv.astype(jnp.float32)) +
+         jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                    krope.astype(jnp.float32))) * scale
+    s = ctx.shard(s, ("batch", "none", "none", "kv_seq"))
+    valid = (kpos[:, None, None, :] >= 0) & \
+        (qpos[:, None, :, None] >= kpos[:, None, None, :])
+    s = jnp.where(valid, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    # attend in compressed space, then decompress through wv
+    o_c = jnp.einsum("bhst,btr->bshr", pr, ckv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhd->bshd", o_c, wv.astype(jnp.float32))
+    return o.astype(ckv.dtype)
+
+
+def mla_apply(p, x, ctx: ModelCtx, positions, *, cache=None):
+    cfg = ctx.cfg
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q_nope, q_rope, ckv, krope = _mla_qkv(p, x, ctx, positions)
+    if cache is None:
+        kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        # chunk the query axis like attention_core
+        chunk = ctx.q_chunk
+        if S > chunk and S % chunk == 0:
+            nc = S // chunk
+            resh = lambda a: a.reshape(B, nc, chunk, *a.shape[2:]) \
+                .transpose(1, 0, 2, *range(3, a.ndim + 1))
+            qn, qr, pp = resh(q_nope), resh(q_rope), \
+                positions.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+            attend = jax.checkpoint(
+                lambda qni, qri, pi: _mla_attend(qni, qri, ckv, krope,
+                                                 kpos, pi, p, ctx))
+
+            def body(_, args):
+                qni, qri, pi = args
+                return None, attend(qni, qri, pi)
+
+            _, oc = lax.scan(body, None, (qn, qr, pp))
+            o = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+        else:
+            o = _mla_attend(q_nope, q_rope, ckv, krope, kpos, positions, p, ctx)
+        new_cache = None
+    else:
+        T = cache["ckv"].shape[1]
+        slot = positions % T
+        ckv_c = _ring_write(cache["ckv"], ckv, slot)
+        krope_c = _ring_write(cache["krope"], krope, slot)
+        kpos = _ring_write(cache["kpos"], positions, slot)
+        ckv_c = ctx.shard(ckv_c, ("batch", "kv_seq", "none"))
+        o = _mla_attend(q_nope, q_rope, ckv_c, krope_c, kpos, positions, p, ctx)
+        new_cache = {"ckv": ckv_c, "krope": krope_c, "kpos": kpos}
+    y = _dense(p["o"], o.reshape(B, S, H * hd))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, dtype, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    gated = cfg.activation != "gelu"
+    if gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return merge(
+            ("wi", dense_init(k1, D, F, "embed,mlp", dtype)),
+            ("wg", dense_init(k2, D, F, "embed,mlp", dtype)),
+            ("wo", dense_init(k3, F, D, "mlp,embed", dtype)),
+        )
+    k1, k2 = jax.random.split(key)
+    return merge(
+        ("wi", dense_init(k1, D, F, "embed,mlp", dtype, bias=True)),
+        ("wo", dense_init(k2, F, D, "mlp,embed", dtype, bias=True)),
+    )
+
+
+def mlp_apply(p, x, ctx: ModelCtx):
+    act = jax.nn.silu if ctx.cfg.activation != "gelu" else jax.nn.gelu
+    h = _dense(p["wi"], x)
+    if "wg" in p:
+        h = act(h) * _dense(p["wg"], x)
+    else:
+        h = act(h)
+    h = ctx.shard(h, ("batch", "none", "mlp_act"))
+    return _dense(p["wo"], h)

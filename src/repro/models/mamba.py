@@ -1,0 +1,214 @@
+"""Mamba2 / SSD block — chunked matmul form (state-space duality).
+
+TPU adaptation of arXiv:2405.21060: the sequence is split into chunks of
+``ssm_chunk``; within a chunk the SSD quadratic (matmul) form runs on the
+MXU, and a short ``lax.scan`` carries the (heads, state, head_dim) SSM
+state across chunks.  Decode is the O(1) recurrence.
+
+Layout per block (ngroups = 1, as in the 2.7B config):
+    in_x  : (D, d_inner)      main path
+    in_z  : (D, d_inner)      gate
+    in_B  : (D, N)            input->state projection
+    in_C  : (D, N)            state->output projection
+    in_dt : (D, nh)           per-head timestep
+    conv  : (w, d_inner+2N)   depthwise causal conv over [x, B, C]
+    A_log : (nh,)             state decay  (A = -exp(A_log))
+    D_res : (nh,)             skip
+    out   : (d_inner, D)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models.common import dense_init, merge, trunc_normal
+from repro.models.layers import ModelCtx
+
+
+def mamba_init(key, cfg: ArchConfig, dtype):
+    D, DI, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    NH, W = cfg.num_ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 7)
+    params, axes = merge(
+        ("in_x", dense_init(ks[0], D, DI, "embed,inner", dtype)),
+        ("in_z", dense_init(ks[1], D, DI, "embed,inner", dtype)),
+        ("in_B", dense_init(ks[2], D, N, "embed,state", dtype)),
+        ("in_C", dense_init(ks[3], D, N, "embed,state", dtype)),
+        ("in_dt", dense_init(ks[4], D, NH, "embed,none", dtype, bias=True)),
+        ("out", dense_init(ks[5], DI, D, "inner,embed", dtype)),
+    )
+    params["conv"] = trunc_normal(ks[6], (W, DI + 2 * N), 0.3, dtype)
+    axes["conv"] = "conv,inner"
+    params["A_log"] = jnp.zeros((NH,), jnp.float32)
+    axes["A_log"] = "none"
+    params["D_res"] = jnp.ones((NH,), jnp.float32)
+    axes["D_res"] = "none"
+    return params, axes
+
+
+def _depthwise_causal_conv(x, w):
+    """x (B,S,C), w (W,C): causal depthwise conv via shift-and-add
+    (W is 4 — unrolled adds beat a conv op at this width)."""
+    W = w.shape[0]
+    y = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :]
+        shifted = shifted[:, :x.shape[1], :]
+        y = y + shifted * w[W - 1 - i]
+    return y
+
+
+def _ssd_chunked(xh, dt, A, B_, C_, chunk, ctx,
+                 h0: Optional[jnp.ndarray] = None,
+                 head_block: int = 8):
+    """SSD in chunked matmul form, processed in sequential head blocks.
+
+    xh (B,S,NH,P) head-split inputs; dt (B,S,NH) post-softplus;
+    A (NH,) negative decay; B_, C_ (B,S,N).
+    Returns (y (B,S,NH,P), h_final (B,NH,N,P)).
+
+    The intra-chunk decay tensor is (B, nc, Q, Q, NH) fp32 — at jamba
+    scale that is hundreds of GB if materialised for all heads at once.
+    ``lax.map`` over blocks of ``head_block`` heads keeps the live set
+    to one block's worth (the blocks are independent by construction).
+    """
+    B, S, NH, P = xh.shape
+    hb = head_block
+    while hb > 1 and NH % hb:
+        hb -= 1
+    if hb < NH:
+        nb = NH // hb
+        r = lambda a, ax: jnp.moveaxis(
+            a.reshape(a.shape[:ax] + (nb, hb) + a.shape[ax + 1:]), ax, 0)
+        xs = (r(xh, 2), r(dt, 2), r(A, 0),
+              None if h0 is None else r(h0, 1))
+
+        def blk(args):
+            xh_b, dt_b, A_b, h0_b = args
+            return _ssd_heads(xh_b, dt_b, A_b, B_, C_, chunk, ctx, h0_b)
+
+        if h0 is None:
+            y_b, h_b = lax.map(lambda a: blk(a + (None,)), xs[:3])
+        else:
+            y_b, h_b = lax.map(blk, xs)
+        y = jnp.moveaxis(y_b, 0, 2).reshape(B, S, NH, P)
+        h = jnp.moveaxis(h_b, 0, 1).reshape(B, NH, *h_b.shape[3:])
+        return y, h
+    return _ssd_heads(xh, dt, A, B_, C_, chunk, ctx, h0)
+
+
+def _ssd_heads(xh, dt, A, B_, C_, chunk, ctx,
+               h0: Optional[jnp.ndarray] = None):
+    """SSD core for one head block (see _ssd_chunked)."""
+    B, S, NH, P = xh.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    r = lambda a: a.reshape(B, nc, chunk, *a.shape[2:])
+    xc, dtc, Bc, Cc = r(xh), r(dt), r(B_), r(C_)
+
+    dA = dtc * A[None, None, None, :]                      # (B,nc,Q,NH) <= 0
+    cs = jnp.cumsum(dA, axis=2)                            # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic, MXU-friendly) ----
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                   Bc.astype(jnp.float32))                 # (B,nc,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,Q,K,NH)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(mask[None, None, :, :, None],
+                  G[..., None] * decay * dtc[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)                   # decay to chunk end
+    state_c = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                         Bc.astype(jnp.float32), seg * dtc,
+                         xc.astype(jnp.float32))           # (B,nc,NH,N,P)
+
+    # ---- inter-chunk scan ----
+    total = jnp.exp(cs[:, :, -1, :])                       # (B,nc,NH)
+    h_init = (jnp.zeros((B, NH, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(h, inputs):
+        st, tot = inputs                                   # (B,NH,N,P),(B,NH)
+        h_out = h                                          # state BEFORE chunk
+        h = h * tot[:, :, None, None] + st
+        return h, h_out
+
+    (h_final, h_prev) = lax.scan(
+        body, h_init, (state_c.transpose(1, 0, 2, 3, 4),
+                       total.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)               # (B,nc,NH,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(cs), h_prev)
+    y = (y_intra + y_inter).reshape(B, S, NH, P)
+    return y, h_final
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype):
+    NH, N, P = cfg.num_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    W, DI = cfg.ssm_conv_width, cfg.d_inner
+    return {
+        "h": jnp.zeros((batch, NH, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, DI + 2 * N), dtype),
+    }
+
+
+def mamba_apply(p, x, ctx: ModelCtx, *, cache=None):
+    """x (B,S,D) -> (B,S,D).  cache => single-step decode recurrence."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    DI, N, NH, P = cfg.d_inner, cfg.ssm_state, cfg.num_ssm_heads, cfg.ssm_head_dim
+
+    xz = x @ p["in_x"]["w"]                                # (B,S,DI)
+    z = x @ p["in_z"]["w"]
+    Bp = x @ p["in_B"]["w"]                                # (B,S,N)
+    Cp = x @ p["in_C"]["w"]
+    dt = x @ p["in_dt"]["w"] + p["in_dt"]["b"]             # (B,S,NH)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                               # (NH,)
+
+    conv_in = jnp.concatenate([xz, Bp, Cp], axis=-1)       # (B,S,DI+2N)
+
+    if cache is None or S > 1:
+        # full-sequence path (training, or prefill when a cache is given)
+        conv_out = _depthwise_causal_conv(conv_in, p["conv"])
+        conv_out = jax.nn.silu(conv_out)
+        xz_c, Bp_c, Cp_c = jnp.split(conv_out, [DI, DI + N], axis=-1)
+        xh = xz_c.reshape(B, S, NH, P)
+        xh = ctx.shard(xh, ("batch", "none", "heads_act", "none"))
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:
+            chunk = S            # smoke shapes: single chunk
+        h0 = None if cache is None else cache["h"]
+        y, h_final = _ssd_chunked(xh, dt, A, Bp_c, Cp_c, chunk, ctx, h0=h0)
+        if cache is None:
+            new_cache = None
+        else:
+            W = cfg.ssm_conv_width
+            tail = conv_in[:, -(W - 1):, :]
+            new_cache = {"h": h_final, "conv": tail}
+    else:
+        # decode: roll the conv window, O(1) state update
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,·)
+        conv_out = jnp.einsum("bwc,wc->bc", window, p["conv"])[:, None, :]
+        conv_out = jax.nn.silu(conv_out)
+        xz_c, Bp_c, Cp_c = jnp.split(conv_out, [DI, DI + N], axis=-1)
+        xh = xz_c.reshape(B, 1, NH, P)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                # (B,NH)
+        h = cache["h"] * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", Bp_c[:, 0].astype(jnp.float32),
+            dt[:, 0], xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhnp->bhp", Cp_c[:, 0].astype(jnp.float32),
+                       h)[:, None]                         # (B,1,NH,P)
+        new_cache = {"h": h, "conv": window[:, 1:, :]}
+
+    y = y + xh.astype(jnp.float32) * p["D_res"][None, None, :, None]
+    y = y.reshape(B, S, DI).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out"]["w"], new_cache

@@ -1,0 +1,46 @@
+"""The paper's model family: an L-layer MLP over binary medication features.
+
+Params are a tuple of per-layer dicts ``{"w": (fan_in, fan_out), "b": (fan_out,)}``
+— the exact structure the SCBF channel algebra (repro.core.channels) is
+defined over.  Forward is ReLU-activated with a single logit output.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(features: Sequence[int], key: jax.Array) -> Tuple[dict, ...]:
+    """He-init an MLP with the given feature sizes (incl. input and output)."""
+    params = []
+    keys = jax.random.split(key, len(features) - 1)
+    for k, fin, fout in zip(keys, features[:-1], features[1:]):
+        w = jax.random.normal(k, (fin, fout), jnp.float32) * jnp.sqrt(2.0 / fin)
+        b = jnp.zeros((fout,), jnp.float32)
+        params.append({"w": w, "b": b})
+    return tuple(params)
+
+
+def mlp_forward(params: Sequence[dict], x: jnp.ndarray) -> jnp.ndarray:
+    """Returns logits of shape (batch,) for a single-output head, else
+    (batch, fan_out)."""
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0] if h.shape[-1] == 1 else h
+
+
+def mlp_activations(params: Sequence[dict], x: jnp.ndarray):
+    """Post-ReLU activations per hidden layer (for APoZ pruning)."""
+    acts = []
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+            acts.append(h)
+    return acts

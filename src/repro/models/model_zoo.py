@@ -1,0 +1,236 @@
+"""ArchConfig -> runnable model bundle.
+
+A bundle packages everything the launcher, dry-run, smoke tests and the
+federated trainer need:
+
+    init(key)                       -> (params, logical_axes)
+    loss_fn(params, batch)          -> scalar loss
+    train_step(params, batch, lr)   -> (loss, new_params)       (pure SGD)
+    prefill_step(params, batch)     -> (last_logits, caches)
+    decode_step(params, batch)      -> (logits, new_caches)
+    input_specs(shape, window)      -> pytree of ShapeDtypeStruct
+    make_cache(batch, cache_len)    -> concrete zero caches (small configs)
+
+Decode shapes lower ``decode_step`` — ONE token against a ``seq_len`` KV
+cache.  ``long_500k`` on quadratic-attention archs uses the sliding-window
+variant (window passed in; cache length == window), recorded per-run in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import transformer as T
+from repro.models.common import DTYPES
+from repro.models.layers import ModelCtx
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    ctx: ModelCtx
+    init: Callable
+    loss_fn: Callable
+    train_step: Callable
+    prefill_step: Callable
+    decode_step: Callable
+    input_specs: Callable
+    make_cache: Callable
+
+
+def _aux_from_batch(params, cfg: ArchConfig, batch, ctx) -> Optional[jnp.ndarray]:
+    """Cross-attention context tokens: encoder output (audio) or projected
+    patch embeddings (vision)."""
+    if cfg.encoder_layers:
+        return T.encode(params, cfg, batch["audio_embeds"], ctx)
+    if cfg.frontend == "vision":
+        return batch["image_embeds"]
+    return None
+
+
+def _cache_len(cfg: ArchConfig, shape: ShapeConfig, window: int) -> int:
+    return min(shape.seq_len, window) if window else shape.seq_len
+
+
+def build(cfg: ArchConfig, shard: Callable = lambda x, a: x,
+          q_chunk: int = 512, remat: bool = True,
+          kv_quant: bool = False, moe_dshard: bool = False,
+          moe_groups: int = 1) -> ModelBundle:
+    dtype = DTYPES[cfg.dtype]
+    ctx = ModelCtx(cfg=cfg, dtype=dtype, shard=shard, q_chunk=q_chunk,
+                   kv_quant=kv_quant, moe_dshard=moe_dshard,
+                   moe_groups=moe_groups)
+
+    def init(key):
+        return T.init_model(cfg, key)
+
+    # ------------------------------------------------------------- train
+    def loss_fn(params, batch, window: int = 0):
+        aux = _aux_from_batch(params, cfg, batch, ctx)
+        h, _ = T.forward_hidden(params, cfg, batch["tokens"], ctx, aux=aux,
+                                remat=remat,
+                                window=window or cfg.sliding_window)
+        return T.chunked_ce_loss(params, cfg, h, batch["targets"], ctx)
+
+    def train_step(params, batch, lr: float = 1e-3):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return loss, new
+
+    # ----------------------------------------------------------- serving
+    def prefill_step(params, batch, window: int = 0):
+        """Writes the whole prompt into fresh caches; returns last logits."""
+        aux = _aux_from_batch(params, cfg, batch, ctx)
+        caches = batch["caches"]
+        tokens = batch["tokens"]
+        h, new_caches = T.forward_hidden(params, cfg, tokens, ctx, aux=aux,
+                                         caches=caches, remat=False,
+                                         window=window or cfg.sliding_window)
+        logits = T.logits_from_hidden(params, cfg, h[:, -1:, :])[:, 0]
+        extras = {}
+        if aux is not None:
+            extras["ctx_tokens"] = aux
+        return logits, {"layers": new_caches, **extras}
+
+    def decode_step(params, batch, window: int = 0):
+        """One token (B,1) at absolute position pos (B,1) against caches."""
+        caches = batch["caches"]
+        aux = caches.get("ctx_tokens")
+        h, new_caches = T.forward_hidden(
+            params, cfg, batch["token"], ctx, positions=batch["pos"],
+            aux=aux, caches=caches["layers"], remat=False,
+            window=window or cfg.sliding_window)
+        logits = T.logits_from_hidden(params, cfg, h[:, 0, :])
+        out = {"layers": new_caches}
+        if aux is not None:
+            out["ctx_tokens"] = aux
+        return logits, out
+
+    # ------------------------------------------------------ cache pytree
+    def _layer_cache_struct(spec: T.LayerSpec, batch: int, cache_len: int,
+                            as_struct: bool):
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if as_struct \
+            else (lambda s, d: (jnp.full(s, -1, d) if d == jnp.int32
+                                else jnp.zeros(s, d)))
+        c: Dict[str, Any] = {}
+        if spec.kind == "attn":
+            if cfg.use_mla:
+                c["attn"] = {
+                    "ckv": mk((batch, cache_len, cfg.kv_lora_rank), dtype),
+                    "krope": mk((batch, cache_len, cfg.qk_rope_dim), dtype),
+                    "kpos": mk((batch, cache_len), jnp.int32),
+                }
+            elif kv_quant:
+                c["attn"] = {
+                    "k": mk((batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), jnp.int8),
+                    "v": mk((batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), jnp.int8),
+                    "k_scale": mk((batch, cache_len, cfg.num_kv_heads),
+                                  jnp.float32),
+                    "v_scale": mk((batch, cache_len, cfg.num_kv_heads),
+                                  jnp.float32),
+                    "kpos": mk((batch, cache_len), jnp.int32),
+                }
+            else:
+                c["attn"] = {
+                    "k": mk((batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+                    "v": mk((batch, cache_len, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+                    "kpos": mk((batch, cache_len), jnp.int32),
+                }
+        else:
+            c["mamba"] = {
+                "h": mk((batch, cfg.num_ssm_heads, cfg.ssm_state,
+                         cfg.ssm_head_dim), jnp.float32),
+                "conv": mk((batch, cfg.ssm_conv_width - 1,
+                            cfg.d_inner + 2 * cfg.ssm_state), dtype),
+            }
+        if spec.cross:
+            # cross-attention K/V computed once at prefill (§Perf iter 8)
+            t_ctx = (cfg.encoder_seq if cfg.encoder_layers
+                     else cfg.num_patch_tokens)
+            c["cross"] = {
+                "k": mk((batch, t_ctx, cfg.num_kv_heads, cfg.head_dim),
+                        dtype),
+                "v": mk((batch, t_ctx, cfg.num_kv_heads, cfg.head_dim),
+                        dtype),
+                "kpos": mk((batch, t_ctx), jnp.int32),
+            }
+        return c
+
+    def cache_pytree(batch: int, cache_len: int, as_struct: bool):
+        prefix, unit, repeats = T.unit_pattern(cfg)
+        out: Dict[str, Any] = {}
+        if prefix:
+            out["prefix"] = [
+                _layer_cache_struct(s, batch, cache_len, as_struct)
+                for s in prefix]
+        unit_c = {f"l{i}": _layer_cache_struct(s, batch, cache_len, as_struct)
+                  for i, s in enumerate(unit)}
+        if as_struct:
+            out["stack"] = jax.tree_util.tree_map(
+                lambda sds: jax.ShapeDtypeStruct((repeats,) + sds.shape,
+                                                 sds.dtype), unit_c)
+        else:
+            out["stack"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (repeats,) + a.shape).copy(),
+                unit_c)
+        return out
+
+    def make_cache(batch: int, cache_len: int):
+        return cache_pytree(batch, cache_len, as_struct=False)
+
+    # ------------------------------------------------------- input specs
+    def input_specs(shape: ShapeConfig, window: int = 0):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs = {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+            if cfg.encoder_layers:
+                specs["audio_embeds"] = sds((B, cfg.encoder_seq,
+                                             cfg.d_model), dtype)
+            elif cfg.frontend == "vision":
+                specs["image_embeds"] = sds((B, cfg.num_patch_tokens,
+                                             cfg.d_model), dtype)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": sds((B, S), i32),
+                     "caches": cache_pytree(B, _cache_len(cfg, shape, window),
+                                            as_struct=True)}
+            if cfg.encoder_layers:
+                specs["audio_embeds"] = sds((B, cfg.encoder_seq,
+                                             cfg.d_model), dtype)
+            elif cfg.frontend == "vision":
+                specs["image_embeds"] = sds((B, cfg.num_patch_tokens,
+                                             cfg.d_model), dtype)
+            return specs
+        # decode
+        caches: Dict[str, Any] = {
+            "layers": cache_pytree(B, _cache_len(cfg, shape, window),
+                                   as_struct=True)}
+        if cfg.encoder_layers:
+            caches["ctx_tokens"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                       dtype)
+        elif cfg.frontend == "vision":
+            caches["ctx_tokens"] = sds((B, cfg.num_patch_tokens,
+                                        cfg.d_model), dtype)
+        return {"token": sds((B, 1), i32), "pos": sds((B, 1), i32),
+                "caches": caches}
+
+    return ModelBundle(cfg=cfg, ctx=ctx, init=init, loss_fn=loss_fn,
+                       train_step=train_step, prefill_step=prefill_step,
+                       decode_step=decode_step, input_specs=input_specs,
+                       make_cache=make_cache)

@@ -1,0 +1,240 @@
+"""Mixture-of-Experts block with capacity-bucketed sort routing.
+
+TPU-native dispatch (DESIGN.md §5): instead of a (tokens × experts ×
+capacity) one-hot einsum — whose dispatch mask alone would be terabytes at
+32k context × 160 experts — we
+
+  1. route each token to its top-k experts,
+  2. build an (experts, capacity) *gather table* of token ids via an
+     argsort over expert assignments (position-within-expert comes from a
+     searchsorted rank trick, all O(Tk log Tk) and jit-friendly),
+  3. gather tokens into (E, C, D) expert buckets, run the expert FFNs as
+     one batched einsum on the MXU, and
+  4. scatter-add results back with the router gate weights.
+
+Compute is therefore ≈ active-expert FLOPs × capacity_factor, and the
+expert axis shards over the mesh "model" axis (expert parallelism); the
+bucket gather/scatter across token-sharded ↔ expert-sharded layouts is
+where XLA inserts the all-to-all — visible in the §Roofline collective
+term.  Tokens overflowing an expert's capacity are dropped (their residual
+path still carries them), matching standard dropped-token MoE semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers
+from repro.models.common import dense_init, merge, trunc_normal
+from repro.models.layers import ModelCtx, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, ke, ks = jax.random.split(key, 3)
+    scale = 1.0 / (D ** 0.5)
+    params = {
+        "router": {"w": trunc_normal(kr, (D, E), scale, jnp.float32)},
+        "wi": trunc_normal(jax.random.fold_in(ke, 0), (E, D, F), scale, dtype),
+        "wg": trunc_normal(jax.random.fold_in(ke, 1), (E, D, F), scale, dtype),
+        "wo": trunc_normal(jax.random.fold_in(ke, 2), (E, F, D),
+                           1.0 / (F ** 0.5), dtype),
+    }
+    axes = {
+        "router": {"w": "embed,none"},
+        "wi": "experts,embed,mlp",
+        "wg": "experts,embed,mlp",
+        "wo": "experts,mlp,embed",
+    }
+    if cfg.num_shared_experts:
+        p, a = mlp_init(ks, cfg, dtype,
+                        d_ff=cfg.d_ff * cfg.num_shared_experts)
+        params["shared"], axes["shared"] = p, a
+    return params, axes
+
+
+def _capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    c = int(cfg.moe_capacity_factor * num_tokens * cfg.experts_per_token
+            / cfg.num_experts)
+    c = max(c, 1)
+    return ((c + 7) // 8) * 8        # 8-aligned buckets for tiling
+
+
+def moe_apply(p, x, ctx: ModelCtx):
+    """x (B,S,D) -> (B,S,D).
+
+    With ``ctx.moe_groups == G > 1`` tokens are routed in G independent
+    groups laid out on the mesh "data" axis: every group's top-k, sort,
+    bucket-build, gather and combine are batched over a G axis that is
+    *sharded over data*, so the dispatch gather reads only device-local
+    rows (no replication of the full token buffer — §Perf H1 iter 4).
+    Per-group capacity keeps the total bucket count identical; dropping
+    becomes group-local, the standard grouped-MoE semantics.
+    """
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G = ctx.moe_groups
+    while G > 1 and T % G:
+        G -= 1
+    if G > 1:
+        y = _moe_grouped(p, x.reshape(T, D), ctx, G)
+        y = y.reshape(B, S, D)
+        if "shared" in p:
+            y = y + mlp_apply(p["shared"], x, ctx)
+        return y
+    C = _capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    # --- route ---
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T,E)
+    gate, eidx = jax.lax.top_k(probs, K)                       # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- position-within-expert via stable argsort + rank trick ---
+    flat_e = eidx.reshape(-1)                                  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)     # token ids
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first_of_e = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(T * K, dtype=jnp.int32) - first_of_e      # rank in expert
+    keep = pos < C
+
+    # --- (E, C) gather/combine tables; dropped tokens land in a scratch
+    # column.  The gate table lets the combine be a single segment-sum
+    # from the expert buckets back to tokens (no (T·k, D) re-gather —
+    # EXPERIMENTS.md §Perf H1 iter 2).
+    col = jnp.where(keep, pos, C)
+    table = jnp.full((E, C + 1), T, dtype=jnp.int32)           # T = pad row id
+    table = table.at[sorted_e, col].set(jnp.where(keep, flat_t[order], T))
+    gate_tab = jnp.zeros((E, C + 1), jnp.float32)
+    gate_tab = gate_tab.at[sorted_e, col].set(
+        jnp.where(keep, flat_g[order], 0.0))
+    table, gate_tab = table[:, :C], gate_tab[:, :C]
+
+    # --- expert compute on (E, C, D) buckets ---
+    xpad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    if ctx.moe_dshard:
+        # gather with D sharded over 'model': each device gathers its own
+        # D-slice locally; the (E/model)-layout needed by the expert
+        # matmul is restored by an all-to-all instead of replicating the
+        # full token buffer (§Perf H1 iter 3, dispatch side)
+        xpad = ctx.shard(xpad, ("none", "mlp_act"))
+        xe = xpad[table]                                       # (E,C,D)
+        xe = ctx.shard(xe, ("none", "capacity", "mlp_act"))
+        xe = ctx.shard(xe, ("expert", "capacity", "none"))
+    else:
+        xe = xpad[table]                                       # (E,C,D)
+        xe = ctx.shard(xe, ("expert", "capacity", "none"))
+    act = jax.nn.silu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wi"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    h = ctx.shard(h, ("expert", "capacity", "none"))  # expert owns 'model'
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # (E,C,D)
+
+    # --- combine: weight buckets by their gates and scatter-add straight
+    # back to token order (one segment-sum over the E·C bucket rows) ---
+    yw = ye * gate_tab[..., None].astype(ye.dtype)
+    if ctx.moe_dshard:
+        # reshard expert outputs (E/model, C, D) -> (E, C, D/model) first:
+        # the scatter-add then produces D-sharded partials with NO full-D
+        # all-reduce over the model axis (§Perf H1 iter 3) — the expert ->
+        # token return trip becomes an all-to-all instead of a 21 GB AR
+        yw = ctx.shard(yw, ("none", "capacity", "mlp_act"))
+    yf = jax.ops.segment_sum(yw.reshape(E * C, D).astype(jnp.float32),
+                             table.reshape(E * C), num_segments=T + 1)[:T]
+    if ctx.moe_dshard:
+        yf = ctx.shard(yf, ("none", "mlp_act"))
+    y = yf.reshape(B, S, D).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, ctx)
+    return y
+
+
+def _moe_grouped(p, xf, ctx: ModelCtx, G: int):
+    """Grouped (per-data-shard) routing.  xf (T, D) -> (T, D).
+
+    Every routing step carries a leading G axis sharded over "data"; the
+    expert axis shards over "model".  The dispatch gather is batched over
+    G (operand and indices share the G sharding), so XLA partitions it
+    with zero cross-device traffic; the only activation collective left
+    is the combine's partial-sum reduction over the model axis.
+    """
+    cfg = ctx.cfg
+    T, D = xf.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    Tg = T // G
+    Cg = _capacity(cfg, Tg)
+    xg = ctx.shard(xf.reshape(G, Tg, D), ("group", "none", "none"))
+
+    logits = (xg.astype(jnp.float32) @ p["router"]["w"])       # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                       # (G,Tg,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    Ng = Tg * K
+    flat_e = eidx.reshape(G, Ng)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)[None], (G, Ng))
+    flat_g = gate.reshape(G, Ng)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first_of = jax.vmap(
+        lambda s: jnp.searchsorted(s, s, side="left"))(sorted_e)
+    pos = jnp.arange(Ng, dtype=jnp.int32)[None] - first_of
+    keep = pos < Cg
+    col = jnp.where(keep, pos, Cg)
+    tok_sorted = jnp.take_along_axis(flat_t, order, axis=-1)
+    gat_sorted = jnp.take_along_axis(flat_g, order, axis=-1)
+
+    def build_tables(se, co, ts, gs, kp):
+        tab = jnp.full((E, Cg + 1), Tg, jnp.int32)
+        tab = tab.at[se, co].set(jnp.where(kp, ts, Tg))
+        gtab = jnp.zeros((E, Cg + 1), jnp.float32)
+        gtab = gtab.at[se, co].set(jnp.where(kp, gs, 0.0))
+        return tab[:, :Cg], gtab[:, :Cg]
+
+    table, gate_tab = jax.vmap(build_tables)(sorted_e, col, tok_sorted,
+                                             gat_sorted, keep)
+    table = ctx.shard(table, ("group", "expert", "none"))
+
+    xpad = jnp.concatenate(
+        [xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)          # (G,Tg+1,D)
+    xe = jax.vmap(lambda xp, tb: xp[tb])(xpad, table)          # (G,E,Cg,D)
+    xe = ctx.shard(xe, ("group", "expert", "none", "none"))
+
+    act = jax.nn.silu
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["wi"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    h = ctx.shard(h, ("group", "expert", "none", "none"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])              # (G,E,Cg,D)
+
+    yw = ye * gate_tab[..., None].astype(ye.dtype)
+
+    def combine(yg, tb):
+        return jax.ops.segment_sum(
+            yg.reshape(E * Cg, D).astype(jnp.float32),
+            tb.reshape(E * Cg), num_segments=Tg + 1)[:Tg]
+
+    yf = jax.vmap(combine)(yw, table)                          # (G,Tg,D)
+    yf = ctx.shard(yf, ("group", "none", "none"))
+    return yf.reshape(T, D).astype(xf.dtype)
+
+
+def aux_load_balance_loss(p, x, cfg: ArchConfig) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (beyond-paper extra)."""
+    B, S, D = x.shape
+    logits = x.reshape(-1, D).astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    _, eidx = jax.lax.top_k(probs, cfg.experts_per_token)
+    onehot = jax.nn.one_hot(eidx[..., 0], cfg.num_experts)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    return cfg.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,324 @@
+"""Generic decoder(-encoder) transformer over heterogeneous layer patterns.
+
+Every assigned architecture is expressed as:
+
+    prefix layers (unrolled)  +  R repeats of a layer *unit* (lax.scan)
+
+where a unit is the architecture's repeating pattern — 1 layer for dense
+models, [dense, moe] for Llama-4, [7×mamba, attn] for Jamba, [4×self,
+cross] for the VLM, etc.  Unit params are stacked on a leading "layers"
+axis so the whole depth compiles to ONE scanned HLO body (80 dry-run
+combos stay compilable), with ``jax.checkpoint`` on the unit for training.
+
+Caches mirror the param structure: a pytree per unit, stacked on the same
+leading axis, carried through the scan as per-unit xs/ys.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.common import DTYPES, dense_init, merge, norm_init, \
+    stack_inits, trunc_normal
+from repro.models.layers import ModelCtx
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str            # "attn" | "mamba"
+    moe: bool = False
+    cross: bool = False  # extra cross-attention sublayer
+
+
+def layer_specs(cfg: ArchConfig) -> List[LayerSpec]:
+    specs = []
+    for l in range(cfg.num_layers):
+        kind = "attn" if cfg._is_attn_layer(l) else "mamba"
+        cross = bool(cfg.cross_attn_every) and \
+            (l % cfg.cross_attn_every == cfg.cross_attn_every - 1)
+        specs.append(LayerSpec(kind, cfg._is_moe_layer(l), cross))
+    return specs
+
+
+def unit_pattern(cfg: ArchConfig) -> Tuple[List[LayerSpec], List[LayerSpec], int]:
+    """(prefix_specs, unit_specs, repeats)."""
+    specs = layer_specs(cfg)
+    prefix = specs[:cfg.first_dense_layers]
+    rest = specs[cfg.first_dense_layers:]
+    period = 1
+    for k in (cfg.attention_every, cfg.moe_every if cfg.num_experts else 1,
+              cfg.cross_attn_every or 1):
+        period = math.lcm(period, k)
+    if len(rest) % period:
+        raise ValueError(f"{cfg.name}: {len(rest)} layers not divisible by "
+                         f"pattern period {period}")
+    unit = rest[:period]
+    for r in range(0, len(rest), period):
+        if rest[r:r + period] != unit:
+            raise ValueError(f"{cfg.name}: layer pattern is not periodic")
+    return prefix, unit, len(rest) // period
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 6)
+    pairs = [("norm1", norm_init(cfg.d_model, dtype,
+                                 bias=cfg.norm == "layernorm"))]
+    if spec.kind == "attn":
+        attn = L.mla_init(ks[0], cfg, dtype) if cfg.use_mla \
+            else L.gqa_init(ks[0], cfg, dtype)
+        pairs.append(("attn", attn))
+    else:
+        pairs.append(("mamba", M.mamba_init(ks[0], cfg, dtype)))
+    if spec.cross:
+        pairs.append(("cross_norm", norm_init(cfg.d_model, dtype,
+                                              bias=cfg.norm == "layernorm")))
+        pairs.append(("cross", L.gqa_init(ks[1], cfg, dtype)))
+    if cfg.d_ff:
+        pairs.append(("norm2", norm_init(cfg.d_model, dtype,
+                                         bias=cfg.norm == "layernorm")))
+        if spec.moe:
+            pairs.append(("moe", MOE.moe_init(ks[2], cfg, dtype)))
+        else:
+            pairs.append(("mlp", L.mlp_init(ks[3], cfg, dtype)))
+    return merge(*pairs)
+
+
+def _unit_init(key, cfg: ArchConfig, unit: List[LayerSpec], dtype):
+    ks = jax.random.split(key, len(unit))
+    pairs = [(f"l{i}", _layer_init(ks[i], cfg, s, dtype))
+             for i, s in enumerate(unit)]
+    return merge(*pairs)
+
+
+def _encoder_layer_init(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return merge(
+        ("norm1", norm_init(cfg.d_model, dtype, bias=cfg.norm == "layernorm")),
+        ("attn", L.gqa_init(ks[0], cfg, dtype)),
+        ("norm2", norm_init(cfg.d_model, dtype, bias=cfg.norm == "layernorm")),
+        ("mlp", L.mlp_init(ks[1], cfg, dtype)),
+    )
+
+
+def init_model(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_axes) for the full model."""
+    dtype = DTYPES[cfg.dtype]
+    prefix, unit, repeats = unit_pattern(cfg)
+    k_embed, k_pre, k_stack, k_un, k_enc = jax.random.split(key, 5)
+
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    params["embed"] = {"w": trunc_normal(k_embed, (cfg.vocab_size,
+                                                   cfg.d_model), scale, dtype)}
+    axes["embed"] = {"w": "vocab,embed"}
+
+    if prefix:
+        pk = jax.random.split(k_pre, len(prefix))
+        pre_pairs = [(f"p{i}", _layer_init(pk[i], cfg, s, dtype))
+                     for i, s in enumerate(prefix)]
+        params["prefix"], axes["prefix"] = merge(*pre_pairs)
+
+    sk = jax.random.split(k_stack, repeats)
+    params["stack"], axes["stack"] = stack_inits(
+        lambda k: _unit_init(k, cfg, unit, dtype), sk)
+
+    params["final_norm"], axes["final_norm"] = norm_init(
+        cfg.d_model, dtype, bias=cfg.norm == "layernorm")
+
+    if not cfg.tie_embeddings:
+        params["unembed"], axes["unembed"] = dense_init(
+            k_un, cfg.d_model, cfg.vocab_size, "embed,vocab", dtype)
+
+    if cfg.encoder_layers:
+        ek = jax.random.split(k_enc, cfg.encoder_layers)
+        stack_p, stack_a = stack_inits(
+            lambda k: _encoder_layer_init(k, cfg, dtype), ek)
+        fn_p, fn_a = norm_init(cfg.d_model, dtype,
+                               bias=cfg.norm == "layernorm")
+        params["encoder"] = {"stack": stack_p, "final_norm": fn_p}
+        axes["encoder"] = {"stack": stack_a, "final_norm": fn_a}
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer_forward(lp, spec: LayerSpec, h, ctx: ModelCtx, positions,
+                   aux: Optional[jnp.ndarray], cache, window: int):
+    """One layer; returns (h, new_cache)."""
+    cfg = ctx.cfg
+    new_cache = {}
+    if spec.kind == "attn":
+        xin = L.norm_apply(lp["norm1"], h, cfg.norm)
+        if cfg.use_mla:
+            a, c = L.mla_apply(lp["attn"], xin, ctx, positions,
+                               cache=None if cache is None
+                               else cache.get("attn"))
+        else:
+            a, c = L.gqa_apply(lp["attn"], xin, ctx, positions,
+                               cache=None if cache is None
+                               else cache.get("attn"),
+                               causal=True, window=window)
+        h = h + a
+        if c is not None:
+            new_cache["attn"] = c
+    else:
+        xin = L.norm_apply(lp["norm1"], h, cfg.norm)
+        a, c = M.mamba_apply(lp["mamba"], xin, ctx,
+                             cache=None if cache is None
+                             else cache.get("mamba"))
+        h = h + a
+        if c is not None:
+            new_cache["mamba"] = c
+    if spec.cross:
+        assert aux is not None, "cross-attention layer needs ctx tokens"
+        xin = L.norm_apply(lp["cross_norm"], h, cfg.norm)
+        a, c = L.gqa_apply(lp["cross"], xin, ctx, positions, kv_x=aux,
+                           causal=False,
+                           cache=None if cache is None
+                           else cache.get("cross"))
+        h = h + a
+        if c is not None:
+            new_cache["cross"] = c
+    if "mlp" in lp or "moe" in lp:
+        xin = L.norm_apply(lp["norm2"], h, cfg.norm)
+        if "moe" in lp:
+            h = h + MOE.moe_apply(lp["moe"], xin, ctx)
+        else:
+            h = h + L.mlp_apply(lp["mlp"], xin, ctx)
+    return h, (new_cache or None)
+
+
+def _unit_forward(unit_p, unit_specs, h, ctx, positions, aux, unit_cache,
+                  window):
+    new_caches = {}
+    for i, spec in enumerate(unit_specs):
+        cache_i = None if unit_cache is None else unit_cache[f"l{i}"]
+        h, nc = _layer_forward(unit_p[f"l{i}"], spec, h, ctx, positions,
+                               aux, cache_i, window)
+        new_caches[f"l{i}"] = nc if nc is not None else {}
+    return h, new_caches
+
+
+def forward_hidden(params, cfg: ArchConfig, tokens, ctx: ModelCtx,
+                   positions=None, aux=None, caches=None,
+                   remat: bool = False, window: int = 0):
+    """Token ids -> final hidden states.
+
+    caches: {"prefix": [...], "stack": stacked pytree} or None.
+    Returns (hidden (B,S,D), new_caches-or-None).
+    """
+    prefix, unit, repeats = unit_pattern(cfg)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    h = params["embed"]["w"][tokens]
+    if cfg.rope_theta == 0.0:             # whisper: sinusoidal abs positions
+        h = h + L.sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    h = ctx.shard(h, ("batch", "none", "none"))
+
+    new_caches: Dict[str, Any] = {}
+    if prefix:
+        pc = []
+        for i, spec in enumerate(prefix):
+            cache_i = None if caches is None else caches["prefix"][i]
+            h, nc = _layer_forward(params["prefix"][f"p{i}"], spec, h, ctx,
+                                   positions, aux, cache_i, window)
+            pc.append(nc if nc is not None else {})
+        new_caches["prefix"] = pc
+
+    unit_fn = partial(_unit_forward, unit_specs=tuple(unit), ctx=ctx,
+                      window=window)
+
+    def body(h, xs):
+        unit_p, unit_c = xs
+        fn = lambda h_, up, uc: unit_fn(up, h=h_, positions=positions,
+                                        aux=aux, unit_cache=uc)
+        if remat:
+            fn = jax.checkpoint(fn)
+        h, nc = fn(h, unit_p, unit_c)
+        return h, nc
+
+    stack_caches = None if caches is None else caches["stack"]
+    if stack_caches is None:
+        # dummy per-unit cache pytree of empty dicts
+        stack_caches = jax.tree_util.tree_map(lambda _: 0, ())
+        h, stack_nc = lax.scan(
+            lambda hh, up: body(hh, (up, None)), h, params["stack"])
+    else:
+        h, stack_nc = lax.scan(body, h, (params["stack"], stack_caches))
+    new_caches["stack"] = stack_nc
+
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    return h, (new_caches if caches is not None else None)
+
+
+def encode(params, cfg: ArchConfig, embeds, ctx: ModelCtx,
+           remat: bool = True):
+    """Whisper encoder over precomputed frame embeddings (B,T,D)."""
+    B, T, D = embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    h = embeds + L.sinusoidal_positions(positions, D).astype(embeds.dtype)
+
+    def layer(h, lp):
+        xin = L.norm_apply(lp["norm1"], h, cfg.norm)
+        a, _ = L.gqa_apply(lp["attn"], xin, ctx, positions, causal=False)
+        h = h + a
+        xin = L.norm_apply(lp["norm2"], h, cfg.norm)
+        h = h + L.mlp_apply(lp["mlp"], xin, ctx)
+        return h
+
+    def body(h, lp):
+        fn = jax.checkpoint(layer) if remat else layer
+        return fn(h, lp), None
+
+    h, _ = lax.scan(body, h, params["encoder"]["stack"])
+    return L.norm_apply(params["encoder"]["final_norm"], h, cfg.norm)
+
+
+def logits_from_hidden(params, cfg: ArchConfig, h):
+    w = params["embed"]["w"].T if cfg.tie_embeddings \
+        else params["unembed"]["w"]
+    return h @ w
+
+
+def chunked_ce_loss(params, cfg: ArchConfig, h, targets, ctx: ModelCtx,
+                    chunk: int = 512):
+    """Cross-entropy over the vocab, scanned over sequence chunks so the
+    (B,S,V) logits tensor never materialises (DESIGN.md §5)."""
+    B, S, D = h.shape
+    w = params["embed"]["w"].T if cfg.tie_embeddings \
+        else params["unembed"]["w"]
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hi, ti = xs
+        logits = (hi @ w).astype(jnp.float32)
+        logits = ctx.shard(logits, ("batch", "none", "vocab_act"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (B * S)

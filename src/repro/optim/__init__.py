@@ -1,0 +1,16 @@
+"""Pure-JAX optimizers (no optax in this environment)."""
+from repro.optim.sgd import sgd
+from repro.optim.adam import adam, adamw
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+from repro.config import TrainConfig
+
+
+def from_config(cfg: TrainConfig):
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.learning_rate, momentum=cfg.momentum)
+    if cfg.optimizer == "adam":
+        return adam(cfg.learning_rate)
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.learning_rate, weight_decay=cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

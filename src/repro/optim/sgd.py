@@ -1,0 +1,52 @@
+"""SGD (optionally with momentum), as an (init, update) pair.
+
+Gradient transformations follow the optax convention:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def sgd(learning_rate, momentum: float = 0.0) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        if momentum == 0.0:
+            updates = jax.tree_util.tree_map(
+                lambda g: -lr * g.astype(jnp.float32), grads)
+            return updates, {"step": step}
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return updates, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (
+    ShardingRules, param_shardings, activation_spec, batch_spec)

@@ -1,0 +1,152 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params carry logical axis names (models/common.py).  The rules below map
+them to the production mesh:
+
+  * ``model`` (tensor parallel): experts first (expert parallelism), then
+    fused head/kv projections, FFN intermediates, vocab, SSM inner dim —
+    the FIRST divisible candidate on each tensor wins, so e.g. a MoE
+    expert tensor (experts, embed, mlp) shards experts×model and embed×data
+    while a dense FFN (embed, mlp) shards mlp×model and embed×data;
+  * ``data`` (FSDP): the remaining largest divisible dim, preferring
+    ``embed`` — weights are reduce-scattered/all-gathered by XLA around
+    each layer, which is what makes the 236-400B configs fit;
+  * ``pod``: NEVER used for weights — it is the federated/client axis
+    (DESIGN.md §5): weights are replicated across pods and only the
+    channel-masked gradient exchange crosses it.
+
+Divisibility is checked per tensor; non-divisible candidates fall through
+(e.g. mamba2's vocab 50280 is not 16-divisible, so its embedding shards
+embed×model instead and vocab stays unsharded).
+
+Activations use a separate small table (``activation_spec``) keyed by the
+logical activation-axis names models pass to ``ctx.shard``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import split_ax
+
+# priority order of logical axes for the 'model' mesh axis
+MODEL_PRIORITY = ("experts", "heads", "kv", "mlp", "inner", "vocab",
+                  "lora", "state")
+# priority order for the 'data' (FSDP) mesh axis
+DATA_PRIORITY = ("embed", "mlp", "vocab", "heads", "inner")
+# never sharded
+FROZEN = ("layers", "conv", "none")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh_model: str = "model"
+    mesh_data: str = "data"
+    fsdp: bool = True                # shard weights over data axis too
+
+    def spec_for(self, axes: str, shape: Tuple[int, ...], mesh: Mesh
+                 ) -> P:
+        names = split_ax(axes)
+        assert len(names) == len(shape), (axes, shape)
+        model_n = mesh.shape[self.mesh_model]
+        data_n = mesh.shape[self.mesh_data]
+        assign: list = [None] * len(shape)
+
+        def place(mesh_axis: str, n: int, priority) -> Optional[int]:
+            for logical in priority:
+                for i, nm in enumerate(names):
+                    if nm == logical and assign[i] is None \
+                            and shape[i] % n == 0 and shape[i] >= n:
+                        assign[i] = mesh_axis
+                        return i
+            return None
+
+        place(self.mesh_model, model_n, MODEL_PRIORITY)
+        if self.fsdp:
+            place(self.mesh_data, data_n, DATA_PRIORITY)
+        return P(*assign)
+
+
+def param_shardings(axes_tree, mesh: Mesh,
+                    rules: ShardingRules = ShardingRules(),
+                    shapes_tree=None):
+    """NamedSharding pytree for params given their logical-axes pytree.
+
+    ``shapes_tree``: matching pytree of ShapeDtypeStruct/arrays (needed
+    for divisibility checks).
+    """
+    def mk(axes, leaf):
+        spec = rules.spec_for(axes, tuple(leaf.shape), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(mk, axes_tree, shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def activation_rules(mesh: Mesh, batch_shardable: bool = True,
+                     group_axes=None, batch_override=None
+                     ) -> Dict[str, object]:
+    """logical activation axis -> mesh axes.
+
+    ``group_axes`` / ``batch_override``: the federated train step pins
+    both to ("data",) because the client axis already occupies "pod"
+    (vmap with spmd_axis_name="pod") — inner constraints must not
+    mention the vmapped axis.
+    """
+    b = (batch_axes(mesh) if batch_shardable else ()) \
+        if batch_override is None else tuple(batch_override)
+    g = b if group_axes is None else tuple(group_axes)
+    return {
+        "batch": b,
+        "group": g,
+        "kv_seq": ("model",),
+        "vocab_act": ("model",),
+        "mlp_act": ("model",),
+        "expert": ("model",),
+        "capacity": (),          # bucket capacity: keep with expert shard
+        "heads_act": (),
+        "none": (),
+    }
+
+
+def activation_spec(logical: Sequence[str], rules: Dict[str, object]) -> P:
+    out = []
+    for name in logical:
+        ax = rules.get(name, ())
+        out.append(tuple(ax) if ax else None)
+    return P(*out)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Spec for the leading batch dim of inputs; falls back to replication
+    when the batch doesn't divide (long_500k has batch 1)."""
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_size % n == 0:
+        return P(axes)
+    if batch_size % mesh.shape[axes[-1]] == 0:
+        return P(axes[-1])
+    return P(None)
+
+
+def make_shard_fn(mesh: Mesh, batch_shardable: bool = True,
+                  group_axes=None, batch_override=None):
+    """The ``ctx.shard`` callback used inside model code under the mesh."""
+    rules = activation_rules(mesh, batch_shardable, group_axes,
+                             batch_override)
+
+    def shard(x, logical):
+        spec = activation_spec(logical, rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return shard

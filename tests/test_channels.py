@@ -1,0 +1,137 @@
+"""Channel-norm algebra: separability, quantiles, exact edge masks.
+
+The central invariant (paper §2.1 + DESIGN.md §3): an edge is uploaded
+iff it lies on at least one channel whose norm clears the threshold.  We
+check the fast mask against brute-force channel enumeration.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channels
+from repro.models.mlp_net import init_mlp
+
+
+def random_grads(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    gs = []
+    for fin, fout in zip(sizes[:-1], sizes[1:]):
+        gs.append({"w": jnp.asarray(rng.normal(size=(fin, fout)),
+                                    jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(fout,)), jnp.float32)})
+    return gs
+
+
+def test_separability():
+    gs = random_grads((5, 4, 3, 2))
+    scores = channels.layer_scores(gs)
+    T = channels.materialize_channel_tensor(scores)
+    assert T.shape == (4, 3, 2)
+    # brute force: T[i,j,k] = s1[i]+s2[j]+s3[k]
+    for i, j, k in itertools.product(range(4), range(3), range(2)):
+        want = float(scores[0][i] + scores[1][j] + scores[2][k])
+        assert float(T[i, j, k]) == pytest.approx(want, rel=1e-6)
+
+
+def test_layer_scores_definition():
+    gs = random_grads((6, 3, 1))
+    s = channels.layer_scores(gs)
+    w, b = np.asarray(gs[0]["w"]), np.asarray(gs[0]["b"])
+    want = (w ** 2).sum(0) + b ** 2
+    np.testing.assert_allclose(np.asarray(s[0]), want, rtol=1e-6)
+
+
+def test_quantile_exact_small():
+    gs = random_grads((5, 4, 3, 2))
+    scores = channels.layer_scores(gs)
+    thr = channels.channel_quantile(scores, 0.25, selection="positive")
+    T = channels.materialize_channel_tensor(scores).reshape(-1)
+    frac_above = float(jnp.mean(T > thr))
+    assert frac_above == pytest.approx(0.25, abs=2 / T.shape[0])
+
+
+def test_quantile_sampled_close_to_exact(monkeypatch):
+    gs = random_grads((10, 16, 16, 8), seed=3)
+    scores = channels.layer_scores(gs)
+    exact = channels.channel_quantile(scores, 0.1)
+    monkeypatch.setattr(channels, "MAX_MATERIALIZED", 10)
+    approx = channels.channel_quantile(scores, 0.1,
+                                       key=jax.random.PRNGKey(0),
+                                       num_samples=1 << 15)
+    assert float(approx) == pytest.approx(float(exact), rel=0.05)
+
+
+def brute_force_edge_mask(scores, thr):
+    """Edge (p,q,l) uploaded iff ∃ channel through it with norm > thr."""
+    sizes = [int(s.shape[0]) for s in scores]
+    L = len(sizes)
+    masks = [np.zeros((1 if l == 0 else sizes[l - 1], sizes[l]), bool)
+             for l in range(L)]
+    bmasks = [np.zeros(sizes[l], bool) for l in range(L)]
+    for ch in itertools.product(*[range(n) for n in sizes]):
+        norm = sum(float(scores[l][ch[l]]) for l in range(L))
+        if norm > thr:
+            for l in range(L):
+                if l == 0:
+                    masks[0][0, ch[0]] = True
+                else:
+                    masks[l][ch[l - 1], ch[l]] = True
+                bmasks[l][ch[l]] = True
+    return masks, bmasks
+
+
+@pytest.mark.parametrize("alpha", [0.05, 0.25, 0.6])
+def test_edge_mask_exactness(alpha):
+    gs = random_grads((7, 5, 4, 3), seed=42)
+    scores = channels.layer_scores(gs)
+    thr = channels.channel_quantile(scores, alpha)
+    masked, masks = channels.apply_channel_mask(gs, scores, thr)
+    bf_masks, bf_bias = brute_force_edge_mask(
+        [np.asarray(s) for s in scores], float(thr))
+    # layer 0: every input edge of a selected layer-1 neuron
+    got0 = np.asarray(masks[0]["w"])[0]          # rows identical (broadcast)
+    np.testing.assert_array_equal(got0, bf_masks[0][0])
+    for l in range(1, 3):
+        np.testing.assert_array_equal(np.asarray(masks[l]["w"]),
+                                      bf_masks[l])
+        np.testing.assert_array_equal(np.asarray(masks[l]["b"]), bf_bias[l])
+    # masked gradients: zeros exactly off-mask
+    for l, (g, m) in enumerate(zip(gs, masks)):
+        w = np.asarray(masked[l]["w"])
+        assert np.all((w != 0) <= np.asarray(m["w"]))
+        np.testing.assert_array_equal(
+            w[np.asarray(m["w"])], np.asarray(g["w"])[np.asarray(m["w"])])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(1, 3),
+       st.floats(0.05, 0.9), st.integers(0, 10_000))
+def test_mask_monotone_in_threshold(m1, m2, m3, alpha, seed):
+    gs = random_grads((4, m1, m2, m3), seed=seed)
+    scores = channels.layer_scores(gs)
+    thr_lo = channels.channel_quantile(scores, min(alpha + 0.1, 0.95))
+    thr_hi = channels.channel_quantile(scores, alpha)
+    _, masks_lo = channels.apply_channel_mask(gs, scores, thr_lo)
+    _, masks_hi = channels.apply_channel_mask(gs, scores, thr_hi)
+    # a higher threshold (smaller upload) selects a subset of edges
+    for ml, mh in zip(masks_hi, masks_lo):
+        assert np.all(np.asarray(ml["w"]) <= np.asarray(mh["w"]))
+
+
+def test_factored_mask_fraction():
+    params = init_mlp((64, 32, 16, 1), jax.random.PRNGKey(0))
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
+    masked, frac = channels.apply_factored_mask(grads, 0.2)
+    # kept fraction should be near-ish the rate (1-D leaves always kept)
+    assert 0.1 < float(frac) < 0.5
+    # idempotence: masking the masked grads keeps them unchanged
+    masked2, _ = channels.apply_factored_mask(masked, 0.9999)
+    for a, b in zip(jax.tree_util.tree_leaves(masked),
+                    jax.tree_util.tree_leaves(masked2)):
+        zero_a = np.asarray(a) == 0
+        np.testing.assert_array_equal(np.asarray(b)[zero_a], 0)

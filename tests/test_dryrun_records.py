@@ -1,0 +1,55 @@
+"""Deliverable (e) gate: every (arch × shape × mesh) dry-run record on
+disk must have compiled OK and fit in HBM.
+
+The sweep itself runs as its own process (it needs 512 virtual devices
+before jax init):  ``python -m repro.launch.dryrun --all --mesh single``
+and ``--mesh multi``.  This test validates whatever records exist and
+skips when the sweep hasn't been run (CI without the artifacts).
+"""
+import glob
+import json
+import os
+
+import pytest
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+RECORDS = sorted(glob.glob(os.path.join(DIR, "*.json")))
+
+HBM_BYTES = 16e9  # TPU v5e
+
+
+@pytest.mark.skipif(not RECORDS, reason="dry-run sweep not run")
+@pytest.mark.parametrize("path", RECORDS, ids=[os.path.basename(p)
+                                               for p in RECORDS])
+def test_dryrun_record_ok(path):
+    with open(path) as f:
+        r = json.load(f)
+    assert r["ok"], f"{r['arch']} {r['shape']} {r['mesh']}: " \
+        f"{r.get('error', '')[:200]}"
+    # per-device persistent state (param shards + inputs incl. caches)
+    # must fit HBM.  Transient temp_size from the XLA:CPU module is only
+    # a loose upper bound (the CPU backend neither fuses elementwise
+    # chains nor schedules for working-set size the way the TPU backend
+    # does), so it is reported in EXPERIMENTS.md but not gated here.
+    mem = r["memory"]
+    args = mem.get("argument_size_in_bytes", 0)
+    assert args < HBM_BYTES, \
+        f"state {args/1e9:.1f} GB exceeds v5e HBM"
+    # roofline terms present and positive
+    t = r["terms"]
+    assert t["compute_s"] > 0
+    assert t["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.skipif(not RECORDS, reason="dry-run sweep not run")
+def test_sweep_coverage():
+    """After the full sweep: 10 archs × 4 shapes × 2 meshes."""
+    names = {os.path.basename(p) for p in RECORDS}
+    if len(names) < 80:
+        pytest.skip(f"partial sweep ({len(names)}/80 records)")
+    from repro import configs
+    from repro.config import INPUT_SHAPES
+    for arch in configs.ASSIGNED:
+        for shape in INPUT_SHAPES:
+            for mesh in ("single", "multi"):
+                assert f"{arch}_{shape}_{mesh}.json" in names

@@ -1,0 +1,80 @@
+"""Loop-aware HLO analyzer: exactness on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module, _crosses_pod
+
+
+def compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_exact():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    st = analyze(compile_text(f, x, x))
+    assert st.flops == pytest.approx(2 * 128 ** 3 * 10)
+
+
+def test_unrolled_matches_scan():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def scan_f(x, w):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=7)
+        return y
+
+    def unrolled_f(x, w):
+        for _ in range(7):
+            x = x @ w
+        return x
+    s1 = analyze(compile_text(scan_f, x, x))
+    s2 = analyze(compile_text(unrolled_f, x, x))
+    assert s1.flops == pytest.approx(s2.flops)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    st = analyze(compile_text(f, x, x))
+    assert st.flops == pytest.approx(2 * 32 ** 3 * 15)
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    st = analyze(compile_text(f, a, b))
+    assert st.flops == pytest.approx(2 * 4 * 16 * 32 * 8)
+
+
+def test_traffic_counts_dot_operands():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    st = analyze(compile_text(f, a, a))
+    assert st.traffic_bytes >= 3 * 128 * 128 * 4
+
+
+def test_cross_pod_classification():
+    line_explicit = "replica_groups={{0,256},{1,257}}"
+    assert _crosses_pod(line_explicit, 256)
+    line_local = "replica_groups={{0,1},{2,3}}"
+    assert not _crosses_pod(line_local, 256)
+    # iota: groups are contiguous 16-blocks -> pod-local
+    assert not _crosses_pod("replica_groups=[32,16]<=[512]", 256)
+    # iota with transpose: stride-256 partners -> crosses pods
+    assert _crosses_pod("replica_groups=[256,2]<=[2,256]T(1,0)", 256)

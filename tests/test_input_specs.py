@@ -1,0 +1,107 @@
+"""input_specs: every (arch × shape) pair yields well-formed
+ShapeDtypeStructs — the contract the dry-run lowers against.
+Pure metadata, no allocation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.config import INPUT_SHAPES
+from repro.models import model_zoo
+
+PAIRS = [(a, s) for a in configs.ASSIGNED for s in INPUT_SHAPES]
+
+
+@pytest.mark.parametrize("arch,shape", PAIRS)
+def test_input_specs_shapes(arch, shape):
+    cfg = configs.get(arch)
+    bundle = model_zoo.build(cfg)
+    sc = INPUT_SHAPES[shape]
+    window = 8192 if (sc.name == "long_500k"
+                      and not cfg.supports_long_decode_natively) else 0
+    specs = bundle.input_specs(sc, window=window)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+
+    if sc.kind == "train":
+        assert specs["tokens"].shape == (sc.global_batch, sc.seq_len)
+        assert specs["targets"].dtype == jnp.int32
+    elif sc.kind == "prefill":
+        assert specs["tokens"].shape == (sc.global_batch, sc.seq_len)
+        assert "caches" in specs
+    else:
+        assert specs["token"].shape == (sc.global_batch, 1)
+        assert specs["pos"].shape == (sc.global_batch, 1)
+        # cache length: full seq, or the sliding window for dense archs
+        kpos = [x for p, x in
+                jax.tree_util.tree_flatten_with_path(specs["caches"])[0]
+                if "kpos" in str(p[-1])]
+        if kpos:
+            expect = window or sc.seq_len
+            assert kpos[0].shape[-1] == expect
+
+    # modality stubs present exactly for audio/vlm
+    has_audio = any("audio" in str(p)
+                    for p, _ in jax.tree_util.tree_flatten_with_path(specs)[0])
+    assert has_audio == (cfg.encoder_layers > 0 and sc.kind == "train"
+                         or cfg.encoder_layers > 0 and sc.kind == "prefill") \
+        or cfg.encoder_layers == 0 or sc.kind == "decode"
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_long500k_policy(arch):
+    """Sub-quadratic archs decode 500k natively; dense archs need the
+    sliding-window variant (DESIGN.md §4)."""
+    cfg = configs.get(arch)
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.supports_long_decode_natively
+    else:
+        assert not cfg.supports_long_decode_natively
+
+
+def test_assigned_configs_match_brief():
+    """Spot-check the pinned numbers from the assignment table."""
+    c = configs.get("deepseek-v2-236b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.vocab_size) == \
+        (60, 5120, 128, 102400)
+    assert (c.num_experts, c.experts_per_token, c.num_shared_experts,
+            c.kv_lora_rank) == (160, 6, 2, 512)
+    c = configs.get("qwen2.5-32b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (64, 5120, 40, 8, 27648, 152064)
+    assert c.qkv_bias
+    c = configs.get("jamba-1.5-large-398b")
+    assert (c.attention_every, c.num_experts, c.experts_per_token) == \
+        (16 // 2, 16, 2)
+    c = configs.get("mamba2-2.7b")
+    assert (c.num_layers, c.d_model, c.ssm_state, c.vocab_size) == \
+        (64, 2560, 128, 50280)
+    c = configs.get("llama-3.2-vision-11b")
+    assert (c.cross_attn_every, c.num_kv_heads, c.d_ff) == (5, 8, 14336)
+    c = configs.get("chatglm3-6b")
+    assert c.rope_fraction == 0.5 and c.num_kv_heads == 2
+    c = configs.get("whisper-medium")
+    assert c.encoder_layers == 24 and c.vocab_size == 51865
+    c = configs.get("llama4-maverick-400b-a17b")
+    assert c.num_experts == 128 and c.experts_per_token == 1
+    c = configs.get("qwen2-0.5b")
+    assert c.d_model == 896 and c.num_kv_heads == 2
+    c = configs.get("qwen1.5-0.5b")
+    assert c.d_model == 1024 and c.num_kv_heads == 16
+
+
+def test_param_counts_plausible():
+    """Analytic totals land near the models' nameplate sizes."""
+    expect = {
+        "deepseek-v2-236b": (200e9, 280e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "jamba-1.5-large-398b": (300e9, 450e9),
+        "llama4-maverick-400b-a17b": (330e9, 480e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "chatglm3-6b": (5.5e9, 7.5e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "qwen2-0.5b": (0.3e9, 0.7e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9}-{hi/1e9}]"

@@ -1,0 +1,78 @@
+"""AUC-ROC / AUC-PR correctness: brute force + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.metrics.auc import auc_pr, auc_roc, binary_cross_entropy
+
+
+def brute_force_auc_roc(scores, labels):
+    """Pairwise P(score_pos > score_neg) + 0.5 ties."""
+    pos = scores[labels == 1]
+    neg = scores[labels == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return None
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return (wins + 0.5 * ties) / (len(pos) * len(neg))
+
+
+def test_auc_roc_perfect():
+    s = jnp.array([0.9, 0.8, 0.2, 0.1])
+    y = jnp.array([1.0, 1.0, 0.0, 0.0])
+    assert float(auc_roc(s, y)) == pytest.approx(1.0)
+    assert float(auc_pr(s, y)) == pytest.approx(1.0)
+
+
+def test_auc_roc_random_vs_bruteforce():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n = rng.integers(10, 200)
+        scores = rng.normal(size=n).astype(np.float32)
+        # inject ties
+        scores = np.round(scores, 1)
+        labels = rng.integers(0, 2, size=n).astype(np.float32)
+        if labels.sum() in (0, n):
+            labels[0] = 1 - labels[0]
+        got = float(auc_roc(jnp.asarray(scores), jnp.asarray(labels)))
+        want = brute_force_auc_roc(scores, labels)
+        assert got == pytest.approx(float(want), abs=1e-5)
+
+
+def test_auc_pr_matches_sklearn_formula():
+    # hand-checked example (sklearn.average_precision_score == 0.8333...)
+    s = jnp.array([0.9, 0.8, 0.7, 0.6])
+    y = jnp.array([1.0, 0.0, 1.0, 0.0])
+    assert float(auc_pr(s, y)) == pytest.approx(1 / 2 + 2 / 3 / 2, abs=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-500, 500), min_size=4, max_size=64),
+       st.data())
+def test_auc_roc_property_monotone_invariance(scores, data):
+    labels = data.draw(st.lists(st.integers(0, 1), min_size=len(scores),
+                                max_size=len(scores)))
+    labels = np.asarray(labels, np.float32)
+    if labels.sum() in (0, len(labels)):
+        return
+    # grid-valued scores: the affine transform below is exact in fp32,
+    # so tie structure is preserved exactly
+    s = np.asarray(scores, np.float32) / 8.0
+    a1 = float(auc_roc(jnp.asarray(s), jnp.asarray(labels)))
+    # strictly monotone transform preserves ROC-AUC
+    a2 = float(auc_roc(jnp.asarray(2.0 * s + 1.0), jnp.asarray(labels)))
+    assert a1 == pytest.approx(a2, abs=1e-5)
+    # label flip + score negation preserves it too
+    a3 = float(auc_roc(jnp.asarray(-s), jnp.asarray(1 - labels)))
+    assert a1 == pytest.approx(a3, abs=1e-5)
+
+
+def test_bce_matches_manual():
+    logits = jnp.array([0.0, 2.0, -2.0])
+    labels = jnp.array([1.0, 1.0, 0.0])
+    p = 1 / (1 + np.exp(-np.asarray(logits)))
+    want = -np.mean(np.asarray(labels) * np.log(p) +
+                    (1 - np.asarray(labels)) * np.log(1 - p))
+    assert float(binary_cross_entropy(logits, labels)) == \
+        pytest.approx(float(want), abs=1e-6)

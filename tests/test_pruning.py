@@ -1,0 +1,66 @@
+"""APoZ pruning: scores, budgets, structural surgery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning
+from repro.models.mlp_net import init_mlp, mlp_forward, mlp_activations
+
+
+def test_apoz_scores_manual():
+    params = init_mlp((8, 4, 1), jax.random.PRNGKey(0))
+    x = np.random.default_rng(0).random((100, 8)).astype(np.float32)
+    scores = pruning.apoz_scores(params, x, batch_size=32)
+    acts = mlp_activations(params, jnp.asarray(x))
+    want = np.mean(np.asarray(acts[0]) == 0, axis=0)
+    np.testing.assert_allclose(scores[0], want, atol=1e-6)
+
+
+def test_plan_prune_budget_and_floor():
+    apoz = [np.array([0.9, 0.8, 0.1, 0.0]), np.array([0.95, 0.2])]
+    keep = pruning.plan_prune(apoz, prune_rate=0.5, already_pruned=0,
+                              original_hidden=6, prune_total=1.0)
+    kept_total = sum(len(k) for k in keep)
+    assert kept_total == 6 - 3                   # budget = 0.5*6 = 3
+    assert all(len(k) >= 1 for k in keep)        # never empties a layer
+    # highest-APoZ neurons went first
+    assert 0 not in keep[0] or 1 not in keep[0]
+
+
+def test_plan_prune_respects_total():
+    apoz = [np.linspace(1, 0, 10)]
+    keep = pruning.plan_prune(apoz, prune_rate=0.5, already_pruned=4,
+                              original_hidden=10, prune_total=0.5)
+    # only 1 more allowed (total 5, already 4)
+    assert len(keep[0]) == 9
+
+
+def test_apply_structure_shapes_and_forward():
+    params = init_mlp((8, 6, 4, 1), jax.random.PRNGKey(0))
+    keep = [np.array([0, 2, 5]), np.array([1, 3])]
+    new = pruning.apply_structure(params, keep)
+    assert new[0]["w"].shape == (8, 3)
+    assert new[1]["w"].shape == (3, 2)
+    assert new[2]["w"].shape == (2, 1)
+    x = jnp.ones((5, 8))
+    y = mlp_forward(new, x)
+    assert y.shape == (5,)
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_pruning_dead_neurons_preserves_function():
+    """Pruning neurons whose outgoing weights are zero must not change
+    the network function."""
+    params = list(init_mlp((8, 6, 4, 1), jax.random.PRNGKey(0)))
+    dead = [1, 4]
+    w1 = params[1]["w"].at[dead, :].set(0.0)
+    params[1] = {"w": w1, "b": params[1]["b"]}
+    params = tuple(params)
+    keep = [np.array([i for i in range(6) if i not in dead]),
+            np.arange(4)]
+    pruned = pruning.apply_structure(params, keep)
+    x = jnp.asarray(np.random.default_rng(0).random((20, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(mlp_forward(params, x)),
+                               np.asarray(mlp_forward(pruned, x)),
+                               rtol=1e-5, atol=1e-6)

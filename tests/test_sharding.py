@@ -1,0 +1,88 @@
+"""Sharding rules: logical-axis mapping, divisibility fallbacks."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import ShardingRules, activation_rules, \
+    activation_spec, batch_spec
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Only .shape is consulted by spec_for."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+RULES = ShardingRules()
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def spec(axes, shape):
+    return RULES.spec_for(axes, shape, MESH)
+
+
+def test_dense_weight():
+    # (embed, mlp): mlp -> model, embed -> data (FSDP)
+    assert spec("embed,mlp", (5120, 27648)) == P("data", "model")
+
+
+def test_expert_priority():
+    # experts win the model axis; embed gets data
+    assert spec("experts,embed,mlp", (160, 5120, 1536)) == \
+        P("model", "data", None)
+
+
+def test_vocab_not_divisible_falls_through():
+    # mamba2 vocab 50280 is not 16-divisible -> it stays unsharded and the
+    # embed dim picks up the FSDP (data) axis instead
+    s = spec("vocab,embed", (50280, 2560))
+    assert s == P(None, "data")
+    # divisible vocab does take the model axis
+    assert spec("vocab,embed", (65536, 2560)) == P("model", "data")
+
+
+def test_qkv_fused_heads():
+    assert spec("embed,heads", (896, 896)) == P("data", "model")
+
+
+def test_small_dim_replicates():
+    # nothing divisible -> fully replicated
+    assert spec("none,none", (7, 9)) == P(None, None)
+
+
+def test_layers_never_sharded():
+    s = spec("layers,embed,mlp", (24, 1024, 2816))
+    assert s[0] is None
+
+
+def test_batch_spec_fallbacks():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec(mesh, 256) == P(("pod", "data"))
+    assert batch_spec(mesh, 16) == P("data")
+    assert batch_spec(mesh, 1) == P(None)
+
+
+def test_activation_spec():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = activation_rules(mesh)
+    s = activation_spec(("batch", "none", "kv_seq"), rules)
+    assert s == P(("data",), None, ("model",))
+
+
+def test_host_mesh_constraint_runs():
+    """ctx.shard path executes on a 1x1 host mesh (CPU)."""
+    import jax.numpy as jnp
+    from repro.sharding.rules import make_shard_fn
+    mesh = make_host_mesh()
+    shard = make_shard_fn(mesh)
+    x = jnp.ones((4, 8))
+
+    def f(x):
+        return shard(x, ("batch", "none")) * 2
+
+    y = jax.jit(f)(x)
+    np.testing.assert_allclose(np.asarray(y), 2.0)
