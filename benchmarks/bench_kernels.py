@@ -40,6 +40,27 @@ def main():
              time_call(lambda: ops.select_mask(g, row, col, thr)),
              f"traffic={2*m*n*4}B (fused)")
 
+        # fused select-and-compact: emits the COO upload buffers directly
+        # (what repro.comm.wire ships), so the exchange never touches a
+        # dense masked tensor
+        from repro.comm import wire
+        _, _, cnt = ref.select_compact_ref(g, row, col, thr)
+        nnz = int(cnt)
+        # bounded buffer sized to the kept count — with the m*n default
+        # the per-step output revisits dominate and the timing is
+        # meaningless; this kernel always runs interpreted (sequential
+        # grid), so its rows are NOT comparable to compiled-kernel rows
+        cap = max(8, nnz)
+        jref4 = jax.jit(lambda g, r, c: ref.select_compact_ref(
+            g, r, c, thr, capacity=cap))
+        emit(f"select_compact_ref_{spec}", time_call(jref4, g, row, col),
+             f"encoded={wire.coo_bytes(nnz, m*n)}B coo ({nnz} kept)")
+        emit(f"select_compact_pallas_{spec}",
+             time_call(lambda: ops.select_compact(g, row, col, thr,
+                                                  capacity=cap)),
+             f"encoded={wire.cheapest_bytes(nnz, m*n)[1]}B cheapest-codec "
+             "(always interpret mode — not comparable to compiled rows)")
+
         a = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
         jref3 = jax.jit(lambda a: ref.apoz_counts_ref(a))
         emit(f"apoz_ref_{spec}", time_call(jref3, a), "")

@@ -53,8 +53,9 @@ def main() -> None:
 
     print("# === communication table ===")
     from benchmarks.table_communication import run as comm
-    for name, rate, frac in comm(quick=not args.full):
-        print(f"{name}_a{rate},0,param_fraction={frac:.4f}")
+    for name, rate, frac, enc, dense, _codecs in comm(quick=not args.full):
+        print(f"{name}_a{rate},0,param_fraction={frac:.4f};"
+              f"encoded_bytes={enc};dense_bytes={dense}")
 
     print("# === kernel ubenches ===")
     sys.argv = ["bench_kernels"]

@@ -1,0 +1,15 @@
+"""Sparse channel-exchange subsystem: wire formats + byte accounting.
+
+Single source of truth for what SCBF ships over the network and what it
+costs — see ``repro.comm.wire`` and docs/WIRE_FORMAT.md.
+"""
+from repro.comm.wire import (LayerPayload, Payload, apply_payloads,
+                             bitmap_bytes, cheapest_bytes, codec_bytes,
+                             coo_bytes, decode, dense_bytes, encode,
+                             encode_leaf, tree_dense_bytes)
+
+__all__ = [
+    "LayerPayload", "Payload", "apply_payloads", "bitmap_bytes",
+    "cheapest_bytes", "codec_bytes", "coo_bytes", "decode", "dense_bytes",
+    "encode", "encode_leaf", "tree_dense_bytes",
+]

@@ -148,10 +148,13 @@ def apply_channel_mask(grads: Sequence[dict], scores: Sequence[jnp.ndarray],
             # bias of neuron q is on a selected channel iff its best channel is
             b_mask = (jnp.max(scores[l - 1]) + scores[l] + rest) > threshold
         mg = {"w": jnp.where(w_mask, w, jnp.zeros_like(w))}
-        if "b" in g and g["b"] is not None:
+        has_bias = "b" in g and g["b"] is not None
+        if has_bias:
             mg["b"] = jnp.where(b_mask, g["b"], jnp.zeros_like(g["b"]))
         masked.append(mg)
-        masks.append({"w": w_mask, "b": b_mask})
+        # bias-free layers transmit no bias tensor: mask is None so the
+        # upload accounting does not count phantom entries
+        masks.append({"w": w_mask, "b": b_mask if has_bias else None})
     return masked, masks
 
 
@@ -185,9 +188,13 @@ def factored_threshold(scores: Sequence, upload_rate: float,
     """Global α-quantile across every tensor's channel-score pool."""
     if upload_rate >= 1.0:
         return jnp.asarray(-jnp.inf, jnp.float32)   # upload everything
-    pool = jnp.concatenate([s.reshape(-1) for s in scores if s is not None])
+    pool = [s.reshape(-1) for s in scores if s is not None]
+    if not pool:
+        # no >=2-D leaves → nothing to rank; upload everything rather
+        # than crash on an empty concatenate
+        return jnp.asarray(-jnp.inf, jnp.float32)
     q = (1.0 - upload_rate) if selection == "positive" else upload_rate
-    return jnp.quantile(pool, q)
+    return jnp.quantile(jnp.concatenate(pool), q)
 
 
 def apply_factored_mask(grads, upload_rate: float,
@@ -208,7 +215,10 @@ def apply_factored_mask(grads, upload_rate: float,
             kept += leaf.size
             total += leaf.size
             continue
-        keep = s > thr                                         # (fan_out,)
+        # >= so score ties at the threshold keep their channels (a strict
+        # > drops every channel when all scores are equal, e.g. uniform
+        # gradients — an upload_rate > 0 must never upload nothing)
+        keep = s >= thr                                        # (fan_out,)
         m = jnp.where(keep, leaf.astype(jnp.float32),
                       0.0).astype(leaf.dtype)
         masked.append(m)

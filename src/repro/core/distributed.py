@@ -101,9 +101,15 @@ def _compressed_sum(grads_k, rate: float):
         idx_b = idx.reshape((K,) + (1,) * (leaf.ndim - 2) + (k,))
         vals = jnp.take_along_axis(
             lf, jnp.broadcast_to(idx_b, leaf.shape[:-1] + (k,)), axis=-1)
+        # one vectorised segment scatter-add over the stacked (K·k)
+        # buffers — .at[].add sums duplicate channel indices, so clients
+        # that selected the same channel accumulate exactly as the old
+        # per-client Python loop did, without K sequential scatters
+        flat_idx = idx.reshape(K * k)                       # (K*k,)
+        flat_vals = jnp.moveaxis(vals, 0, -2).reshape(
+            vals.shape[1:-1] + (K * k,))                    # (..., K*k)
         dense = jnp.zeros(leaf.shape[1:], jnp.float32)
-        for c in range(K):                                  # K is tiny (pods)
-            dense = dense.at[..., idx[c]].add(vals[c])
+        dense = dense.at[..., flat_idx].add(flat_vals)
         out.append(dense.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import wire
 from repro.config import ScbfConfig, TrainConfig
 from repro.core import pruning, selection
 from repro.core.client import client_delta, local_train
@@ -64,11 +65,16 @@ class RunResult:
         return sum(r.sparse_bytes for r in self.records)
 
 
+# module-level jit so every _evaluate call shares one compilation cache
+# (a per-call jax.jit(...) wrapper recompiled on every evaluation)
+_mlp_forward_jit = jax.jit(mlp_forward)
+
+
 def _evaluate(params, x, y, batch: int = 8192):
     scores = []
-    fwd = jax.jit(mlp_forward)
     for s in range(0, x.shape[0], batch):
-        scores.append(np.asarray(fwd(tuple(params), jnp.asarray(x[s:s + batch]))))
+        scores.append(np.asarray(_mlp_forward_jit(
+            tuple(params), jnp.asarray(x[s:s + batch]))))
     sc = jnp.asarray(np.concatenate(scores))
     yy = jnp.asarray(y)
     return float(auc_roc(sc, yy)), float(auc_pr(sc, yy))
@@ -110,7 +116,7 @@ def run_federated(cohort: MedicalCohort,
             lr = lr * 0.5 * (1 + math.cos(math.pi * frac))
         key, *ckeys = jax.random.split(key, cfg.num_clients + 1)
 
-        client_params, deltas, stats = [], [], []
+        client_params, payloads, stats = [], [], []
         for k, (xc, yc) in enumerate(clients):
             new_p = local_train(tuple(params), xc, yc,
                                 lr, ckeys[k],
@@ -123,17 +129,20 @@ def run_federated(cohort: MedicalCohort,
                 masked, masks, _ = selection.select_gradients(
                     g, cfg.upload_rate, cfg.selection, key=skey,
                     score_norm=cfg.score_norm)
-                deltas.append(tuple(masked))
-                stats.append(selection.UploadStats.from_masks(
-                    [{kk: m[kk] for kk in ("w", "b")} for m in masks]))
+                # the actual upload: cheapest-codec wire payload, not a
+                # dense zero-masked tensor
+                payloads.append(wire.encode(tuple(masked)))
+                stats.append(selection.UploadStats.from_masks(masks))
 
         if method == "scbf":
-            # masked deltas may lack biases for layers without them; they
-            # mirror the param structure here, so a plain tree-sum works
-            params = scbf_update(params, deltas)
+            # server scatter-adds the decoded compact buffers in place —
+            # no K dense deltas are materialised
+            params = scbf_update(params, payloads=payloads)
             up_frac = float(np.mean([s.upload_fraction for s in stats]))
-            sparse_bytes = int(np.sum([s.sparse_bytes for s in stats]))
-            dense_bytes = int(np.sum([s.dense_bytes for s in stats]))
+            # measured bytes of the encoded payloads (single source of
+            # truth: repro.comm.wire), not a mask-count model
+            sparse_bytes = int(np.sum([p.nbytes for p in payloads]))
+            dense_bytes = int(np.sum([p.dense_nbytes for p in payloads]))
         else:
             params = fedavg_update(client_params)
             total = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])

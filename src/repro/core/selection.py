@@ -14,6 +14,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import wire
 from repro.core import channels
 
 
@@ -22,20 +23,27 @@ class UploadStats:
     uploaded_params: int          # non-zero gradient entries uploaded
     total_params: int
     dense_bytes: int              # dense exchange (what FedAvg ships)
-    sparse_bytes: int             # (index, value) sparse encoding
+    sparse_bytes: int             # cheapest wire encoding (repro.comm.wire)
     upload_fraction: float
 
     @classmethod
     def from_masks(cls, masks: Sequence[dict]) -> "UploadStats":
-        up, total = 0, 0
+        """Accounting from boolean masks; byte math delegates to
+        ``repro.comm.wire`` so ``sparse_bytes <= dense_bytes`` holds by
+        construction (cheapest of coo/bitmap/dense per mask array).
+        ``None`` entries (e.g. bias masks of bias-free layers) cost
+        nothing — they correspond to no transmitted tensor.
+        """
+        up, total, sparse = 0, 0, 0
         for m in masks:
             for v in m.values():
                 if v is None:
                     continue
-                up += int(jnp.sum(v))
-                total += int(v.size)
+                nnz, size = int(jnp.sum(v)), int(v.size)
+                up += nnz
+                total += size
+                sparse += wire.cheapest_bytes(nnz, size, itemsize=4)[1]
         dense = total * 4
-        sparse = up * (4 + 4)     # fp32 value + int32 flat index
         return cls(up, total, dense, sparse, up / max(total, 1))
 
 

@@ -3,17 +3,34 @@
 SCBF (paper Algorithm 1):      W <- W + Σ_k ΔW̃_k   (sum of masked deltas)
 Federated Averaging (McMahan): W <- Σ_k (n_k/n) W_k (weight average;
 equal client sizes here, so a plain mean).
+
+``scbf_update`` accepts either dense masked-delta pytrees or encoded
+wire payloads (repro.comm.wire).  The payload path scatter-adds each
+client's compact (index, value) buffers straight into the server
+parameters — the K dense deltas are never materialised.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm import wire
 
-def scbf_update(server_params, masked_deltas: Sequence):
-    """W <- W + Σ_k ΔW̃_k (the paper sums — it does not average)."""
+
+def scbf_update(server_params, masked_deltas: Optional[Sequence] = None,
+                *, payloads: Optional[Sequence["wire.Payload"]] = None):
+    """W <- W + Σ_k ΔW̃_k (the paper sums — it does not average).
+
+    Pass ``masked_deltas`` (dense zero-masked pytrees, the simulation
+    path) or ``payloads`` (encoded uploads, the real sparse exchange);
+    the two are numerically equivalent because encoding is lossless.
+    """
+    if (masked_deltas is None) == (payloads is None):
+        raise ValueError("pass exactly one of masked_deltas | payloads")
+    if payloads is not None:
+        return wire.apply_payloads(server_params, payloads)
     total = masked_deltas[0]
     for d in masked_deltas[1:]:
         total = jax.tree_util.tree_map(jnp.add, total, d)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels.apoz import apoz_counts_pallas
 from repro.kernels.channel_norm import channel_norms_pallas
-from repro.kernels.select_mask import select_mask_pallas
+from repro.kernels.select_mask import (select_compact_pallas,
+                                       select_mask_pallas)
 
 _INTERPRET = jax.default_backend() == "cpu"
 
@@ -75,6 +76,42 @@ def scbf_select_fused(g: jnp.ndarray, row: jnp.ndarray, col: jnp.ndarray,
     out, cnt = select_mask_pallas(gp, rowp, colp, threshold,
                                   bm=bm, bn=bn, interpret=interpret)
     return out[:m, :n], cnt[0]
+
+
+def select_compact(g: jnp.ndarray, row: jnp.ndarray, col: jnp.ndarray,
+                   threshold, capacity: int = None, bm: int = 256,
+                   interpret: bool = None):
+    """Fused select-and-compact: one pass turns g (M,N) into COO upload
+    buffers (idx (capacity,) int32, vals (capacity,) fp32, count int32),
+    keeping entries where row[i]+col[j] > threshold, without
+    materialising the mask or the dense masked gradient as separate
+    arrays.  Default capacity is M*N (never truncates) — but the
+    output buffers are revisited every grid step, so pass a capacity
+    near the expected kept count (e.g. from the upload rate) on large
+    inputs and compare ``count`` against it to detect dropped entries.
+
+    The running-offset compaction needs the grid to execute
+    sequentially, which only interpret mode guarantees on every
+    backend, so this kernel defaults to interpret=True everywhere (the
+    other kernels compile on TPU); pass interpret=False only on a
+    backend whose grid is sequential.
+    """
+    interpret = True if interpret is None else interpret
+    m, n = g.shape
+    if capacity is None:
+        capacity = m * n
+    bm = min(bm, max(8, m))
+    pm = (-m) % bm
+    gp = jnp.pad(g, ((0, pm), (0, 0))) if pm else g
+    # padded rows get -inf scores so they are never selected; columns are
+    # not padded, so kernel flat indices are already g's flat indices
+    rowp = jnp.pad(row.astype(jnp.float32), (0, pm),
+                   constant_values=jnp.float32(-jnp.inf))
+    idx, vals, cnt = select_compact_pallas(gp, rowp, col.astype(jnp.float32),
+                                           threshold, bm=bm,
+                                           capacity=capacity,
+                                           interpret=interpret)
+    return idx, vals, cnt[0]
 
 
 def apoz_counts(acts: jnp.ndarray, bb: int = 512, bn: int = 256,

@@ -32,3 +32,21 @@ def scbf_select_fused_ref(g: jnp.ndarray, row_score, col_score, threshold):
     keep = (row_score[:, None] + col_score[None, :]) > threshold
     masked = jnp.where(keep, g, jnp.zeros_like(g))
     return masked, jnp.sum(keep.astype(jnp.int32))
+
+
+def select_compact_ref(g: jnp.ndarray, row_score, col_score, threshold,
+                       capacity: int = None):
+    """Select-and-compact oracle: row-major COO buffers of the kept
+    entries, (idx (capacity,) int32, vals (capacity,) fp32, count int32).
+    Unused tail is idx=-1 / val=0; entries past capacity drop."""
+    m, n = g.shape
+    if capacity is None:
+        capacity = m * n
+    keep = ((row_score[:, None] + col_score[None, :]) > threshold).reshape(-1)
+    (idx,) = jnp.nonzero(keep, size=capacity, fill_value=-1)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.where(
+        idx >= 0,
+        g.reshape(-1).astype(jnp.float32)[jnp.maximum(idx, 0)],
+        jnp.float32(0))
+    return idx, vals, jnp.sum(keep.astype(jnp.int32))

@@ -40,6 +40,85 @@ def _select_mask_kernel(thr_ref, g_ref, row_ref, col_ref, out_ref, cnt_ref):
     cnt_ref[...] += jnp.sum(keep.astype(jnp.int32))[None]
 
 
+def _select_compact_kernel(thr_ref, g_ref, row_ref, col_ref,
+                           idx_ref, val_ref, cnt_ref):
+    """Fused threshold test + compaction of kept entries.
+
+    Grid is 1-D over row blocks; each step appends its kept entries to
+    the (capacity,) COO output buffers at the running offset carried in
+    ``cnt_ref`` (the grid executes sequentially, so the offset is exact
+    and the output order is row-major).  Entries past capacity drop.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+        val_ref[...] = jnp.zeros_like(val_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    thr = thr_ref[0]
+    keep = (row_ref[...][:, None] + col_ref[...][None, :]) > thr
+    g = g_ref[...].astype(jnp.float32)
+    bm, n = g.shape
+    kp = keep.reshape(-1)
+    kpi = kp.astype(jnp.int32)
+    base = i * bm * n
+    gidx = base + jax.lax.iota(jnp.int32, bm * n)      # global flat index
+    off = cnt_ref[0]
+    pos = off + jnp.cumsum(kpi) - kpi                  # exclusive prefix sum
+    cap = idx_ref.shape[0]
+    target = jnp.where(kp, pos, cap)                   # cap → dropped
+    idx_ref[...] = idx_ref[...].at[target].set(gidx, mode="drop")
+    val_ref[...] = val_ref[...].at[target].set(g.reshape(-1), mode="drop")
+    cnt_ref[...] = (off + jnp.sum(kpi))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "capacity", "interpret"))
+def select_compact_pallas(g: jnp.ndarray, row: jnp.ndarray,
+                          col: jnp.ndarray, threshold,
+                          bm: int = DEFAULT_BM,
+                          capacity: int = None, interpret: bool = True):
+    """(idx (capacity,) int32, vals (capacity,) fp32, count (1,) int32).
+
+    One pass over g: the pairwise score test and the gather of kept
+    entries into the COO buffer are fused, so the boolean mask and the
+    dense masked gradient are never materialised as separate arrays.
+    The output buffers ARE revisited by every grid step (the running
+    offset forces it), so their traffic scales with grid * capacity —
+    keep ``capacity`` near the expected kept count on large inputs
+    rather than the m*n worst case.  Unused buffer tail is idx=-1 /
+    val=0; ``count`` is the true kept total (compare against capacity
+    to detect truncation).
+    """
+    m, n = g.shape
+    assert m % bm == 0, (g.shape, bm)
+    if capacity is None:
+        capacity = m * n
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _select_compact_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),              # threshold
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),         # g row block
+            pl.BlockSpec((bm,), lambda i: (i,)),             # row scores
+            pl.BlockSpec((n,), lambda i: (0,)),              # col scores
+        ],
+        out_specs=[
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((capacity,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, g, row, col)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def select_mask_pallas(g: jnp.ndarray, row: jnp.ndarray, col: jnp.ndarray,
                        threshold, bm: int = DEFAULT_BM,

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# degrades to per-test skips when hypothesis is missing, instead of a
+# module-level collection error
+from _hypothesis_compat import given, settings, st
 
 from repro.core import channels
 from repro.models.mlp_net import init_mlp
@@ -120,6 +123,47 @@ def test_mask_monotone_in_threshold(m1, m2, m3, alpha, seed):
     # a higher threshold (smaller upload) selects a subset of edges
     for ml, mh in zip(masks_hi, masks_lo):
         assert np.all(np.asarray(ml["w"]) <= np.asarray(mh["w"]))
+
+
+def test_factored_threshold_no_matrix_leaves():
+    """A pytree with no >=2-D leaves must not crash on an empty
+    concatenate — everything uploads (threshold -inf)."""
+    grads = {"scale": jnp.ones((5,)), "bias": jnp.zeros((3,))}
+    _, scores = channels.factored_scores(grads)
+    thr = channels.factored_threshold(scores, 0.25)
+    assert float(thr) == -np.inf
+    masked, frac = channels.apply_factored_mask(grads, 0.25)
+    assert float(frac) == pytest.approx(1.0)
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(masked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factored_mask_tied_scores_keep_channels():
+    """When every channel score ties at the threshold (e.g. uniform
+    gradients), the mask must keep the tied channels rather than drop
+    all of them — an upload_rate > 0 never uploads nothing."""
+    grads = {"w": jnp.ones((4, 8), jnp.float32)}
+    masked, frac = channels.apply_factored_mask(grads, 0.5)
+    assert float(frac) > 0.0
+    assert float(jnp.sum(jnp.abs(masked["w"]))) > 0.0
+
+
+def test_channel_mask_biasless_layer_has_none_bias_mask():
+    """Layers without a bias transmit no bias tensor, so their mask's
+    "b" entry is None and the upload accounting skips it."""
+    from repro.core import selection
+    gs = random_grads((6, 4, 2))
+    gs[1] = {"w": gs[1]["w"]}                       # strip the bias
+    scores = channels.layer_scores(gs)
+    thr = channels.channel_quantile(scores, 0.25)
+    masked, masks = channels.apply_channel_mask(gs, scores, thr)
+    assert masks[1]["b"] is None
+    assert "b" not in masked[1]
+    st_ = selection.UploadStats.from_masks(masks)
+    assert st_.total_params == sum(
+        int(np.prod(g["w"].shape)) for g in gs) + gs[0]["b"].shape[0]
+    assert st_.sparse_bytes <= st_.dense_bytes
 
 
 def test_factored_mask_fraction():

@@ -1,0 +1,130 @@
+"""Wire-format subsystem: lossless round-trips, the bytes-never-exceed-
+dense invariant, and sparse-apply == dense-apply equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import wire
+from repro.core import selection
+from repro.core.server import scbf_update
+from repro.models.mlp_net import init_mlp
+
+RATES = [0.05, 0.25, 0.5, 0.9]
+SHAPES = [(4,), (1, 1), (8, 8), (100, 3), (33, 257), (3, 4, 5), (64,)]
+
+
+def _masked_array(shape, density, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=shape).astype(dtype)
+    keep = rng.random(shape) < density
+    return jnp.asarray(np.where(keep, a, 0).astype(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+def test_leaf_roundtrip_exact(shape, density):
+    a = _masked_array(shape, density)
+    lp = wire.encode_leaf(a)
+    back = wire.decode_leaf(lp)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(back))
+    assert lp.nbytes <= wire.dense_bytes(a.size, 4)
+
+
+@pytest.mark.parametrize("codec", ["coo", "bitmap", "dense"])
+def test_every_codec_roundtrips(codec):
+    a = _masked_array((17, 23), 0.3, seed=len(codec))
+    lp = wire.encode_leaf(a, codec=codec)
+    assert lp.codec == codec
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(wire.decode_leaf(lp)))
+
+
+def test_cheapest_bytes_is_min_and_never_above_dense():
+    for size in [1, 7, 64, 10_000]:
+        for nnz in {0, 1, size // 2, size - 1, size} - {-1}:
+            nnz = max(0, nnz)
+            codec, b = wire.cheapest_bytes(nnz, size, 4)
+            assert b == min(wire.codec_bytes(c, nnz, size, 4)
+                            for c in wire.CODECS)
+            assert b <= wire.dense_bytes(size, 4)
+
+
+@pytest.mark.parametrize("rate", RATES)
+def test_mlp_payload_roundtrip_and_byte_invariant(rate):
+    """Paper pipeline end to end: channel-select an MLP delta, encode,
+    decode losslessly, and never pay more than the dense exchange."""
+    key = jax.random.PRNGKey(0)
+    params = init_mlp((40, 16, 8, 1), key)
+    grads = [
+        {"w": jax.random.normal(jax.random.fold_in(key, 2 * i), l["w"].shape),
+         "b": jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                                l["b"].shape)}
+        for i, l in enumerate(params)]
+    masked, masks, _ = selection.select_gradients(grads, rate,
+                                                  key=jax.random.PRNGKey(1))
+    payload = wire.encode(tuple(masked))
+    back = wire.decode(payload)
+    for a, b in zip(jax.tree_util.tree_leaves(tuple(masked)),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert payload.nbytes <= payload.dense_nbytes
+    # mask-based accounting agrees with the invariant too
+    st = selection.UploadStats.from_masks(masks)
+    assert st.sparse_bytes <= st.dense_bytes
+
+
+@pytest.mark.parametrize("rate", RATES)
+def test_sparse_apply_equals_dense_apply(rate):
+    """scbf_update(payloads=...) == scbf_update(masked_deltas) on random
+    MLP deltas — the scatter-add path reproduces the dense tree-sum."""
+    key = jax.random.PRNGKey(3)
+    params = init_mlp((30, 12, 4, 1), key)
+    deltas = []
+    for c in range(4):
+        g = [{"w": jax.random.normal(jax.random.fold_in(key, 10 * c + i),
+                                     l["w"].shape),
+              "b": jax.random.normal(jax.random.fold_in(key, 10 * c + 5 + i),
+                                     l["b"].shape)}
+             for i, l in enumerate(params)]
+        masked, _, _ = selection.select_gradients(
+            g, rate, key=jax.random.fold_in(key, 100 + c))
+        deltas.append(tuple(masked))
+    dense_new = scbf_update(params, deltas)
+    sparse_new = scbf_update(params, payloads=[wire.encode(d)
+                                               for d in deltas])
+    for a, b in zip(jax.tree_util.tree_leaves(dense_new),
+                    jax.tree_util.tree_leaves(sparse_new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_scbf_update_rejects_ambiguous_args():
+    params = init_mlp((6, 3, 1), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        scbf_update(params)
+    with pytest.raises(ValueError):
+        scbf_update(params, [params], payloads=[wire.encode(params)])
+
+
+def test_apply_payloads_shape_mismatch_raises():
+    params = {"w": jnp.zeros((4, 4))}
+    bad = wire.encode({"w": jnp.ones((3, 3))})
+    with pytest.raises(ValueError):
+        wire.apply_payloads(params, [bad])
+
+
+def test_kernel_compact_buffers_match_wire_coo():
+    """The fused select-and-compact kernel emits exactly the (idx, value)
+    buffers the COO codec ships for the same mask."""
+    from repro.kernels import ops, ref
+    g = jax.random.normal(jax.random.PRNGKey(5), (24, 17))
+    row, col = ref.channel_norms_ref(g)
+    thr = jnp.quantile(row[:, None] + col[None, :], 0.8)
+    idx, vals, cnt = ops.select_compact(g, row, col, thr)
+    n = int(cnt)
+    masked = ref.select_mask_ref(g, row, col, thr)
+    lp = wire.encode_leaf(masked, codec="coo")
+    np.testing.assert_array_equal(np.asarray(idx[:n]), lp.idx)
+    np.testing.assert_allclose(np.asarray(vals[:n]),
+                               lp.values.astype(np.float32), rtol=1e-6)

@@ -1,0 +1,48 @@
+"""Hypothesis property tests for the wire formats (skipped cleanly when
+hypothesis is not installed — see requirements-dev.txt)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.comm import wire
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40),
+       st.floats(0.0, 1.0), st.integers(0, 10_000))
+def test_roundtrip_exact_any_shape(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    a = np.where(rng.random((m, n)) < density, a, 0).astype(np.float32)
+    lp = wire.encode_leaf(jnp.asarray(a))
+    np.testing.assert_array_equal(a, np.asarray(wire.decode_leaf(lp)))
+    assert lp.nbytes <= wire.dense_bytes(a.size, 4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 100_000), st.data())
+def test_cheapest_never_beats_itself(size, data):
+    nnz = data.draw(st.integers(0, size))
+    codec, b = wire.cheapest_bytes(nnz, size, 4)
+    for c in wire.CODECS:
+        assert b <= wire.codec_bytes(c, nnz, size, 4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 12), st.integers(0, 10_000))
+def test_apply_payloads_matches_dense_sum(m, n, seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(m, n)), jnp.float32)}
+    deltas = []
+    for c in range(3):
+        d = rng.normal(size=(m, n)).astype(np.float32)
+        d = np.where(rng.random((m, n)) < 0.4, d, 0).astype(np.float32)
+        deltas.append({"w": jnp.asarray(d)})
+    want = params["w"] + sum(d["w"] for d in deltas)
+    got = wire.apply_payloads(params, [wire.encode(d) for d in deltas])
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got["w"]),
+                               rtol=1e-5, atol=1e-6)

@@ -50,6 +50,52 @@ def test_fused_count_sweep(shape):
     assert int(cnt) == int(want_cnt)
 
 
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("q", [0.1, 0.5, 0.9])
+def test_select_compact_sweep(shape, dtype, q):
+    """Fused select-and-compact vs its jnp oracle: identical COO buffers
+    (row-major order), identical counts."""
+    g = jax.random.normal(jax.random.PRNGKey(7), shape).astype(dtype)
+    row, col = ref.channel_norms_ref(g)
+    thr = jnp.quantile(row[:, None] + col[None, :], q)
+    idx, vals, cnt = ops.select_compact(g, row, col, thr)
+    idx_ref, vals_ref, cnt_ref = ref.select_compact_ref(g, row, col, thr)
+    assert int(cnt) == int(cnt_ref)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_ref))
+
+
+def test_select_compact_capacity_truncates_in_order():
+    g = jax.random.normal(jax.random.PRNGKey(8), (32, 16))
+    row, col = ref.channel_norms_ref(g)
+    thr = jnp.quantile(row[:, None] + col[None, :], 0.5)
+    full_idx, full_vals, full_cnt = ops.select_compact(g, row, col, thr)
+    cap = int(full_cnt) // 2
+    idx, vals, cnt = ops.select_compact(g, row, col, thr, capacity=cap)
+    assert int(cnt) == int(full_cnt)          # true count survives
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(full_idx[:cap]))
+    np.testing.assert_array_equal(np.asarray(vals),
+                                  np.asarray(full_vals[:cap]))
+
+
+def test_select_compact_agrees_with_fused_mask():
+    """Scattering the compact buffers back reproduces the fused masked
+    gradient — the two kernels are views of the same selection."""
+    g = jax.random.normal(jax.random.PRNGKey(9), (64, 48))
+    row, col = ref.channel_norms_ref(g)
+    thr = jnp.median(row[:, None] + col[None, :])
+    masked, kept = ops.scbf_select_fused(g, row, col, thr)
+    idx, vals, cnt = ops.select_compact(g, row, col, thr)
+    assert int(cnt) == int(kept)
+    rebuilt = np.zeros(g.size, np.float32)
+    n = int(cnt)
+    rebuilt[np.asarray(idx[:n])] = np.asarray(vals[:n])
+    np.testing.assert_allclose(rebuilt.reshape(g.shape),
+                               np.asarray(masked, np.float32), rtol=1e-6)
+
+
 @pytest.mark.parametrize("shape", [(16, 8), (512, 256), (1000, 77),
                                    (2048, 64), (37, 130)])
 def test_apoz_sweep(shape):

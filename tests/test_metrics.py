@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# degrades to per-test skips when hypothesis is missing, instead of a
+# module-level collection error
+from _hypothesis_compat import given, settings, st
 
 from repro.metrics.auc import auc_pr, auc_roc, binary_cross_entropy
 

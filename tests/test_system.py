@@ -21,6 +21,7 @@ def tcfg():
                        scbf=ScbfConfig(upload_rate=0.1, num_clients=5))
 
 
+@pytest.mark.slow
 def test_scbf_run_structure(cohort, tcfg):
     res = run_federated(cohort, tcfg, method="scbf",
                         mlp_features=(200, 32, 8, 1))
@@ -33,6 +34,7 @@ def test_scbf_run_structure(cohort, tcfg):
     assert res.records[-1].auc_roc > 0.5
 
 
+@pytest.mark.slow
 def test_fedavg_uploads_everything(cohort, tcfg):
     res = run_federated(cohort, tcfg, method="fedavg",
                         mlp_features=(200, 32, 8, 1))
@@ -42,6 +44,7 @@ def test_fedavg_uploads_everything(cohort, tcfg):
     assert res.records[-1].auc_roc > res.records[0].auc_roc
 
 
+@pytest.mark.slow
 def test_scbfwp_prunes(cohort, tcfg):
     cfg = dataclasses.replace(
         tcfg, scbf=dataclasses.replace(tcfg.scbf, prune=True,
