@@ -1,0 +1,102 @@
+"""Federation-engine scaling: vmapped cohort vs. sequential client loop.
+
+Measures one full SCBF round — local training, channel selection, wire
+encoding — for K ∈ {5, 50, 500} clients under both engines, and
+reports the per-round wall clock plus the batched/sequential speedup.
+
+    PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick
+    PYTHONPATH=src python -m benchmarks.bench_fed_engine          # larger shards
+
+Output is the repo's ``name,us_per_call,derived`` CSV convention
+(benchmarks/common.py).  The sequential engine pays K jit dispatches +
+K eager selection passes per round; the batched engine runs the whole
+cohort as one XLA program, so the gap widens roughly linearly in K.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ScbfConfig
+from repro.fed.engine import make_engine
+from repro.models.mlp_net import init_mlp
+
+
+def _synthetic_clients(K: int, n_per_client: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(K):
+        x = (rng.random((n_per_client, d)) < 0.1).astype(np.float32)
+        y = (rng.random(n_per_client) < 0.5).astype(np.float32)
+        out.append((x, y))
+    return out
+
+
+def time_round(eng, params, cfg, lr, K, batch_size, iters: int = 3):
+    """Median seconds per full SCBF round (train+select+encode)."""
+    part = np.arange(K)
+    key = jax.random.PRNGKey(0)
+    times = []
+    for it in range(iters + 1):                 # first round = compile warmup
+        key, kc, ks, kd = jax.random.split(key, 4)
+        ckeys = jax.random.split(kc, K)
+        skeys = jax.random.split(ks, K)
+        dp_keys = jax.random.split(kd, K)
+        t0 = time.perf_counter()
+        payloads, stats = eng.scbf_round(params, part, lr, ckeys, skeys,
+                                         dp_keys, cfg)
+        dt = time.perf_counter() - t0
+        if it:                                  # drop the warmup round
+            times.append(dt)
+    times.sort()
+    return times[len(times) // 2], payloads
+
+
+def run(quick: bool = True, cohort_sizes=(5, 50, 500)):
+    n_per_client = 64 if quick else 512
+    d = 128 if quick else 512
+    feats = (d, 32, 8, 1) if quick else (d, 128, 32, 1)
+    batch_size = 32 if quick else 128
+    cfg = ScbfConfig(upload_rate=0.10, num_clients=max(cohort_sizes))
+    params = init_mlp(feats, jax.random.PRNGKey(1))
+    lr = 0.05
+
+    rows = []
+    for K in cohort_sizes:
+        clients = _synthetic_clients(K, n_per_client, d)
+        seq = make_engine("sequential", clients, batch_size, epochs=1)
+        bat = make_engine("batched", clients, batch_size, epochs=1)
+        t_seq, p_seq = time_round(seq, params, cfg, lr, K, batch_size)
+        t_bat, p_bat = time_round(bat, params, cfg, lr, K, batch_size)
+        speedup = t_seq / t_bat
+        assert sum(p.nbytes for p in p_seq) == sum(p.nbytes for p in p_bat), \
+            "engines must ship identical bytes"
+        emit(f"fed_round_seq_K{K}", t_seq * 1e6,
+             f"clients={K};n_per_client={n_per_client}")
+        emit(f"fed_round_batched_K{K}", t_bat * 1e6,
+             f"clients={K};speedup_vs_seq={speedup:.1f}x")
+        rows.append((K, t_seq, t_bat, speedup))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized shards/model (the default full run is "
+                         "still laptop-scale)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    quick = args.quick or not args.full
+    rows = run(quick=quick)
+    print("# K, seq_s/round, batched_s/round, speedup")
+    for K, ts, tb, sp in rows:
+        print(f"# {K:4d}  {ts:8.4f}  {tb:8.4f}  {sp:6.1f}x")
+
+
+if __name__ == "__main__":
+    main()

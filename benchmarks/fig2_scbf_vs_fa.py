@@ -19,7 +19,8 @@ from repro.data.medical import generate_cohort
 
 def run(quick: bool = True, loops: int = None, out: str = None,
         methods=("scbf", "fedavg", "scbfwp", "fedavgwp"), seed: int = 0,
-        lr: float = 0.05, upload_rate: float = 0.10):
+        lr: float = 0.05, upload_rate: float = 0.10, num_clients: int = 5,
+        engine: str = None):
     if quick:
         cohort = generate_cohort(num_admissions=6000, num_medicines=400,
                                  seed=seed)
@@ -38,14 +39,16 @@ def run(quick: bool = True, loops: int = None, out: str = None,
         # 1/K gives both methods the same effective server step — without
         # it the sum-update diverges at FA's stable lr (EXPERIMENTS.md
         # §Paper-validation, note 2)
-        m_lr = lr / 5 if base == "scbf" else lr
+        m_lr = lr / num_clients if base == "scbf" else lr
         cfg = TrainConfig(
             learning_rate=m_lr, global_loops=loops, local_epochs=2,
             local_batch_size=256, seed=seed,
             scbf=ScbfConfig(upload_rate=upload_rate,
-                            num_clients=5, prune=method.endswith("wp")))
+                            num_clients=num_clients,
+                            prune=method.endswith("wp")))
         results[method] = run_federated(cohort, cfg, method=base,
-                                        mlp_features=feats, verbose=True)
+                                        mlp_features=feats, verbose=True,
+                                        engine=engine)
 
     summary = {}
     for m, res in results.items():
@@ -70,9 +73,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--loops", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--engine", default=None,
+                    choices=(None, "batched", "sequential"))
     ap.add_argument("--out", default="experiments/fig2_summary.json")
     args = ap.parse_args()
-    _, summary = run(quick=not args.full, loops=args.loops, out=args.out)
+    _, summary = run(quick=not args.full, loops=args.loops, out=args.out,
+                     num_clients=args.clients, engine=args.engine)
     for m, s in summary.items():
         print(f"{m:10s} best ROC {s['best_auc_roc']:.4f} "
               f"PR {s['best_auc_pr']:.4f} time {s['total_time_s']:.1f}s "

@@ -18,6 +18,16 @@ def main():
     ap.add_argument("--out", default="experiments/medical")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clients", type=int, default=5)
+    # cross-device scenarios (docs/FED_ENGINE.md)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "sequential"])
+    ap.add_argument("--sample-fraction", type=float, default=1.0)
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--partition", default="iid",
+                    choices=["iid", "dirichlet"])
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
+    ap.add_argument("--dp-noise", type=float, default=0.0)
     args = ap.parse_args()
 
     from repro.launch.train import run_medical
@@ -25,7 +35,7 @@ def main():
     class A:
         methods = args.methods
         loops = args.loops
-        clients = 5
+        clients = args.clients
         lr = args.lr
         local_epochs = 2
         batch_size = 256
@@ -35,6 +45,12 @@ def main():
         prune_total = 0.47
         seed = args.seed
         out = args.out
+        engine = args.engine
+        sample_fraction = args.sample_fraction
+        dropout_rate = args.dropout_rate
+        partition = args.partition
+        dirichlet_alpha = args.dirichlet_alpha
+        dp_noise = args.dp_noise
 
     run_medical(A)
 

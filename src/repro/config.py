@@ -228,6 +228,38 @@ class ScbfConfig:
     factored: bool = True            # factored channel scores for big models
     compressed_exchange: bool = False  # top-k gather exchange across pods
     score_norm: bool = False         # per-layer score normalisation
+    # differential privacy on the upload path (paper §4 future work):
+    # Gaussian mechanism on the masked delta before wire encoding.
+    dp_noise_multiplier: float = 0.0  # 0 = off; sigma = nm * dp_clip_norm
+    dp_clip_norm: float = 1.0        # L2 clip bound S on the masked delta
+    dp_delta: float = 1e-5           # delta of the reported (eps, delta)
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Cross-device federation scenario knobs (repro.fed).
+
+    The seed orchestrator hard-wired 5 always-on clients in a Python
+    loop; these knobs describe the cross-device regimes the federation
+    engine simulates: cohort sampling, dropout/stragglers, buffered
+    async (FedBuff-style), and non-IID hospital silos.
+    """
+
+    engine: str = "batched"          # batched (vmapped cohort) | sequential
+    # --- per-round client sampling (sync mode) ---
+    sample_fraction: float = 1.0     # fraction of clients invited per round
+    dropout_rate: float = 0.0        # P(sampled client never reports back)
+    straggler_rate: float = 0.0      # P(client is slow this round)
+    drop_stragglers: bool = True     # sync: stragglers miss the deadline
+    # --- round scheduling mode ---
+    mode: str = "sync"               # sync | fedbuff (buffered async)
+    buffer_size: int = 10            # fedbuff: server applies every B uploads
+    concurrency: int = 20            # fedbuff: max clients training at once
+    staleness_exponent: float = 0.5  # fedbuff weight = (1+tau)^-gamma
+    server_lr: float = 1.0           # fedbuff server step on the buffer mean
+    # --- data partition across clients ---
+    partition: str = "iid"           # iid (equal shards) | dirichlet
+    dirichlet_alpha: float = 0.5     # label-skew concentration (lower=worse)
 
 
 @dataclass(frozen=True)
@@ -243,6 +275,7 @@ class TrainConfig:
     seed: int = 0
     remat: bool = True
     scbf: ScbfConfig = field(default_factory=ScbfConfig)
+    fed: FedConfig = field(default_factory=FedConfig)
 
 
 # ---------------------------------------------------------------------------

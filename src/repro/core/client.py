@@ -6,6 +6,12 @@ The whole epoch is a ``lax.scan`` over pre-shuffled batches inside one
 jit, so per-loop Python overhead stays negligible even at 5 clients ×
 30 global loops (pruning changes shapes between loops, which simply
 retriggers jit's shape-keyed cache).
+
+``local_train_impl`` / ``masked_local_train_impl`` are the unjitted
+bodies: the federation engine (repro.fed.engine) vmaps them across a
+whole client cohort so K local trainings run as one XLA program.  The
+masked variant carries a per-example weight vector so padded cohort
+rows (repro.fed.cohort) contribute nothing to the loss or gradient.
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.metrics.auc import binary_cross_entropy
+from repro.metrics.auc import bce_elementwise, binary_cross_entropy
 from repro.models.mlp_net import mlp_forward
 
 
@@ -23,10 +29,16 @@ def bce_loss(params, xb, yb):
     return binary_cross_entropy(mlp_forward(params, xb), yb)
 
 
-@partial(jax.jit, static_argnames=("batch_size", "epochs"))
-def local_train(params: Tuple[dict, ...], x: jnp.ndarray, y: jnp.ndarray,
-                lr: float, key: jax.Array, batch_size: int = 256,
-                epochs: int = 1) -> Tuple[dict, ...]:
+def masked_bce_loss(params, xb, yb, wb):
+    """Weighted-mean BCE; zero-weight (padding) examples contribute 0."""
+    per = bce_elementwise(mlp_forward(params, xb), yb)
+    return jnp.sum(per * wb) / jnp.maximum(jnp.sum(wb), 1.0)
+
+
+def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
+                     y: jnp.ndarray, lr: float, key: jax.Array,
+                     batch_size: int = 256, epochs: int = 1
+                     ) -> Tuple[dict, ...]:
     """SGD over the client shard; returns the updated params."""
     n = (x.shape[0] // batch_size) * batch_size
     grad_fn = jax.grad(bce_loss)
@@ -47,6 +59,47 @@ def local_train(params: Tuple[dict, ...], x: jnp.ndarray, y: jnp.ndarray,
     keys = jax.random.split(key, epochs)
     params, _ = jax.lax.scan(one_epoch, params, keys)
     return params
+
+
+def masked_local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
+                            y: jnp.ndarray, w: jnp.ndarray, lr: float,
+                            key: jax.Array, batch_size: int = 256,
+                            epochs: int = 1) -> Tuple[dict, ...]:
+    """``local_train_impl`` with per-example weights (1 real / 0 padding).
+
+    Batches are drawn from the padded shard; the weighted-mean loss
+    renormalises by the real examples in each batch, so a client whose
+    shard is mostly padding still takes correctly-scaled steps (a batch
+    of pure padding is a no-op).
+    """
+    n = (x.shape[0] // batch_size) * batch_size
+    grad_fn = jax.grad(masked_bce_loss)
+
+    def one_epoch(params, key):
+        perm = jax.random.permutation(key, x.shape[0])[:n]
+        xb = x[perm].reshape(-1, batch_size, x.shape[1])
+        yb = y[perm].reshape(-1, batch_size)
+        wb = w[perm].reshape(-1, batch_size)
+
+        def step(p, batch):
+            g = grad_fn(p, batch[0], batch[1], batch[2])
+            p = jax.tree_util.tree_map(lambda a, ga: a - lr * ga, p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(step, params, (xb, yb, wb))
+        return params, None
+
+    keys = jax.random.split(key, epochs)
+    params, _ = jax.lax.scan(one_epoch, params, keys)
+    return params
+
+
+local_train = partial(jax.jit, static_argnames=("batch_size", "epochs"))(
+    local_train_impl)
+
+masked_local_train = partial(
+    jax.jit, static_argnames=("batch_size", "epochs"))(
+    masked_local_train_impl)
 
 
 def client_delta(params_before, params_after):

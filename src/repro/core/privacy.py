@@ -30,17 +30,32 @@ def clip_tree(tree, max_norm: float):
         lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
 
 
-def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float):
+def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float,
+                       masks=None):
     """Clip to max_norm and add N(0, (noise_multiplier*max_norm)^2) to the
-    non-zero (revealed) entries."""
+    revealed entries.
+
+    ``masks`` (a pytree of boolean reveal masks matching ``tree``) says
+    which coordinates are released and must therefore carry noise.  The
+    (ε, δ) analysis assumes noise on *every* released coordinate — a
+    revealed entry whose gradient happens to be exactly zero (e.g. a
+    ReLU-dead unit inside a selected channel) would otherwise ship
+    noiselessly and leak its exact value.  Without ``masks`` the reveal
+    set falls back to ``leaf != 0``, which is only sound when zeros are
+    never released (dense uploads).
+    """
     clipped, _ = clip_tree(tree, max_norm)
     leaves, treedef = jax.tree_util.tree_flatten(clipped)
+    mask_leaves = jax.tree_util.tree_leaves(masks) if masks is not None \
+        else [None] * len(leaves)
+    if len(mask_leaves) != len(leaves):
+        raise ValueError("masks structure does not match tree")
     keys = jax.random.split(key, len(leaves))
     out = []
     sigma = noise_multiplier * max_norm
-    for k, leaf in zip(keys, leaves):
+    for k, leaf, m in zip(keys, leaves, mask_leaves):
         noise = jax.random.normal(k, leaf.shape, jnp.float32) * sigma
-        mask = (leaf != 0)
+        mask = (leaf != 0) if m is None else m
         out.append(jnp.where(mask, leaf.astype(jnp.float32) + noise,
                              0.0).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,20 +1,28 @@
 """SCBF / SCBFwP orchestrator — the paper's Algorithm 1, faithfully.
 
 One ``global loop``:
-  1. every client downloads the server weights and trains locally;
-  2. each client channel-selects its delta (top-α channels by norm,
-     positive or negative selection) and uploads the masked delta;
-  3. server: W <- W + Σ_k ΔW̃_k;
+  1. the round scheduler picks the reporting cohort (full participation
+     reproduces the paper; sampling / dropout / stragglers / buffered
+     async are the cross-device scenarios of repro.fed.scheduler);
+  2. the cohort engine trains every participant and channel-selects its
+     delta (top-α channels by norm) — as one vmapped XLA program
+     (repro.fed.engine.BatchedEngine) or the reference per-client loop;
+  3. the aggregation strategy folds the uploads into the server:
+     W <- W + Σ_k ΔW̃_k for SCBF (repro.fed.strategy);
   4. (SCBFwP) while the cumulative pruned fraction is below θ_total,
      prune θ of the server's hidden neurons by APoZ on the validation
      set and push the pruned structure to all clients;
   5. evaluate AUC-ROC / AUC-PR on the test set.
 
-Returns per-loop records with the communication accounting used by
+``run_federated`` is a thin driver over those three pluggable parts: it
+owns PRNG-key derivation (so engine choice never changes the random
+stream), the lr schedule, differential privacy on the upload path, and
+the per-loop records with the communication accounting used by
 EXPERIMENTS.md (§Paper-validation) and benchmarks/fig2.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
@@ -23,14 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import wire
 from repro.config import ScbfConfig, TrainConfig
-from repro.core import pruning, selection
-from repro.core.client import client_delta, local_train
-from repro.core.server import fedavg_update, scbf_update
-from repro.data.medical import MedicalCohort, federated_split
+from repro.core import privacy, pruning
+from repro.data.medical import MedicalCohort, dirichlet_split, federated_split
 from repro.metrics.auc import auc_pr, auc_roc
 from repro.models.mlp_net import init_mlp, mlp_forward
+from repro.optim import schedules
 
 
 @dataclass
@@ -44,16 +50,24 @@ class LoopRecord:
     wall_time: float             # seconds for the loop (train+select+update)
     flops_proxy: float           # ~params * examples (pruning shrinks this)
     hidden_sizes: Tuple[int, ...] = ()
+    num_participants: int = 0    # clients whose updates arrived this loop
+    epsilon: Optional[float] = None   # cumulative DP ε (None: DP off)
 
 
 @dataclass
 class RunResult:
     method: str
     records: List[LoopRecord] = field(default_factory=list)
+    dp_delta: Optional[float] = None  # δ of the reported (ε, δ); None: DP off
 
     @property
     def final(self) -> LoopRecord:
         return self.records[-1]
+
+    @property
+    def final_epsilon(self) -> Optional[float]:
+        """Cumulative (ε, δ)-DP ε spent over the whole run (None: DP off)."""
+        return self.records[-1].epsilon if self.records else None
 
     def best(self, key: str = "auc_roc") -> float:
         return max(getattr(r, key) for r in self.records)
@@ -80,75 +94,154 @@ def _evaluate(params, x, y, batch: int = 8192):
     return float(auc_roc(sc, yy)), float(auc_pr(sc, yy))
 
 
+def _partition(cohort: MedicalCohort, train_cfg: TrainConfig):
+    fed = train_cfg.fed
+    if fed.partition == "dirichlet":
+        return dirichlet_split(cohort.x_train, cohort.y_train,
+                               train_cfg.scbf.num_clients,
+                               alpha=fed.dirichlet_alpha,
+                               seed=train_cfg.seed)
+    if fed.partition == "iid":
+        return federated_split(cohort.x_train, cohort.y_train,
+                               train_cfg.scbf.num_clients,
+                               seed=train_cfg.seed)
+    raise ValueError(f"unknown partition {fed.partition!r}; iid|dirichlet")
+
+
+def _lr_schedule(train_cfg: TrainConfig):
+    if train_cfg.lr_schedule == "cosine":
+        return schedules.cosine_decay(train_cfg.learning_rate,
+                                      max(train_cfg.global_loops - 1, 1))
+    return schedules.constant(train_cfg.learning_rate)
+
+
 def run_federated(cohort: MedicalCohort,
                   train_cfg: TrainConfig,
                   method: str = "scbf",
                   mlp_features: Optional[Tuple[int, ...]] = None,
-                  verbose: bool = False) -> RunResult:
+                  verbose: bool = False,
+                  engine: Optional[str] = None) -> RunResult:
     """Run one federated experiment.
 
     method: "scbf" | "fedavg", with pruning controlled by
-    ``train_cfg.scbf.prune`` (→ SCBFwP / FAwP).
+    ``train_cfg.scbf.prune`` (→ SCBFwP / FAwP).  ``engine`` overrides
+    ``train_cfg.fed.engine`` ("batched" vmapped cohort | "sequential"
+    reference loop); both consume the same PRNG stream, and for
+    equal-size shards (the paper's IID split) they produce identical
+    trajectories.  Ragged cohorts (Dirichlet) batch differently —
+    the padded engine runs ``n_max // B`` masked batches per epoch
+    while the sequential loop runs ``n_k // B`` — so there the engine
+    choice selects between two legitimate trainings, not two
+    implementations of one (docs/FED_ENGINE.md §Caveats).
     """
+    # deferred: repro.fed modules import repro.core.* at module scope, so
+    # importing them here (not at module top) keeps repro.core importable
+    # from either direction
+    from repro.fed.engine import make_engine
+    from repro.fed.scheduler import make_scheduler
+    from repro.fed.strategy import RoundContribution, make_strategy
+
     cfg: ScbfConfig = train_cfg.scbf
+    fed = train_cfg.fed
     if method not in ("scbf", "fedavg"):
         raise ValueError(method)
+    if cfg.dp_noise_multiplier > 0 and method != "scbf":
+        raise ValueError("dp_noise_multiplier applies to the sparse scbf "
+                         "upload path; method='fedavg' ships full weights "
+                         "with no DP mechanism — refusing to run with a "
+                         "privacy guarantee silently off")
+    if fed.mode == "fedbuff":
+        if method != "scbf":
+            raise ValueError("fedbuff buffers sparse scbf uploads; "
+                             "method must be 'scbf'")
+        if cfg.prune:
+            raise ValueError("pruning changes shapes under in-flight "
+                             "clients; unsupported in fedbuff mode")
 
     feats = mlp_features or (cohort.num_features, 256, 64, 1)
     key = jax.random.PRNGKey(train_cfg.seed)
     key, init_key = jax.random.split(key)
     params = init_mlp(feats, init_key)
 
-    clients = federated_split(cohort.x_train, cohort.y_train,
-                              cfg.num_clients, seed=train_cfg.seed)
-    clients = [(jnp.asarray(x), jnp.asarray(y)) for x, y in clients]
+    clients = _partition(cohort, train_cfg)
+    eng = make_engine(engine or fed.engine, clients,
+                      train_cfg.local_batch_size, train_cfg.local_epochs)
+    scheduler = make_scheduler(fed, cfg.num_clients, train_cfg.seed)
+    strategy = make_strategy(method, cfg, fed)
+    state = strategy.init(params)
+    # fedbuff only: stale version snapshots (sync trains on the current
+    # params, so keeping the initial model alive would be pure waste)
+    history = {0: params} if fed.mode == "fedbuff" else None
+    lr_fn = _lr_schedule(train_cfg)
 
+    dp_on = method == "scbf" and cfg.dp_noise_multiplier > 0
+    # ε composes per *release*, not per loop: under sampling, dropout or
+    # fedbuff a client uploads in only some rounds, so the spend is
+    # tracked per client and the worst (most-releasing) client reported
+    dp_releases = np.zeros(cfg.num_clients, dtype=np.int64)
     original_hidden = sum(f for f in feats[1:-1])
     pruned_so_far = 0
-    result = RunResult(method=method + ("wp" if cfg.prune else ""))
+    result = RunResult(method=method + ("wp" if cfg.prune else ""),
+                       dp_delta=cfg.dp_delta if dp_on else None)
 
     for loop in range(train_cfg.global_loops):
         t0 = time.perf_counter()
-        lr = train_cfg.learning_rate
-        if train_cfg.lr_schedule == "cosine":
-            import math
-            frac = loop / max(train_cfg.global_loops - 1, 1)
-            lr = lr * 0.5 * (1 + math.cos(math.pi * frac))
-        key, *ckeys = jax.random.split(key, cfg.num_clients + 1)
+        lr = float(lr_fn(jnp.asarray(loop)))
+        plan = scheduler.plan(loop, state.version)
+        part = plan.participants
+        P = plan.num_participants
 
-        client_params, payloads, stats = [], [], []
-        for k, (xc, yc) in enumerate(clients):
-            new_p = local_train(tuple(params), xc, yc,
-                                lr, ckeys[k],
-                                batch_size=train_cfg.local_batch_size,
-                                epochs=train_cfg.local_epochs)
-            client_params.append(new_p)
+        # one split per round regardless of engine or cohort size; every
+        # client k's training key is ckeys_all[k], independent of who
+        # else was sampled
+        key, kc, ks, kd = jax.random.split(key, 4)
+        ckeys_all = jax.random.split(kc, cfg.num_clients)
+
+        payloads, stats = [], []
+        if P:
+            ckeys = ckeys_all[np.asarray(part)]
+            if fed.mode == "fedbuff":
+                params_for = [history[state.version - int(tau)]
+                              for tau in plan.staleness]
+            else:
+                params_for = state.params
             if method == "scbf":
-                g = client_delta(params, new_p)
-                key, skey = jax.random.split(key)
-                masked, masks, _ = selection.select_gradients(
-                    g, cfg.upload_rate, cfg.selection, key=skey,
-                    score_norm=cfg.score_norm)
-                # the actual upload: cheapest-codec wire payload, not a
-                # dense zero-masked tensor
-                payloads.append(wire.encode(tuple(masked)))
-                stats.append(selection.UploadStats.from_masks(masks))
+                skeys = jax.random.split(ks, P)
+                dp_keys = jax.random.split(kd, P)
+                payloads, stats = eng.scbf_round(
+                    params_for, part, lr, ckeys, skeys, dp_keys, cfg)
+                dp_releases[np.asarray(part)] += 1
+                contrib = RoundContribution(
+                    num_examples=eng.counts[np.asarray(part)],
+                    staleness=plan.staleness, payloads=payloads)
+            else:
+                client_params, counts = eng.fedavg_round(params_for, part,
+                                                         lr, ckeys)
+                contrib = RoundContribution(
+                    num_examples=counts, staleness=plan.staleness,
+                    client_params=client_params)
+            state = strategy.aggregate(state, contrib)
+        params = state.params
+        if fed.mode == "fedbuff":
+            history[state.version] = params
+            live = scheduler.referenced_versions() | {state.version}
+            history = {v: p for v, p in history.items() if v in live}
 
+        # ---- communication accounting ----
         if method == "scbf":
-            # server scatter-adds the decoded compact buffers in place —
-            # no K dense deltas are materialised
-            params = scbf_update(params, payloads=payloads)
-            up_frac = float(np.mean([s.upload_fraction for s in stats]))
+            up_frac = float(np.mean([s.upload_fraction for s in stats])) \
+                if stats else 0.0
             # measured bytes of the encoded payloads (single source of
             # truth: repro.comm.wire), not a mask-count model
-            sparse_bytes = int(np.sum([p.nbytes for p in payloads]))
-            dense_bytes = int(np.sum([p.dense_nbytes for p in payloads]))
+            sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
+                if payloads else 0
+            dense_bytes = int(np.sum([p.dense_nbytes for p in payloads])) \
+                if payloads else 0
         else:
-            params = fedavg_update(client_params)
             total = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
                         for l in params)
-            up_frac = 1.0
-            dense_bytes = total * 4 * cfg.num_clients
+            up_frac = 1.0 if P else 0.0
+            dense_bytes = total * 4 * P
             sparse_bytes = dense_bytes
 
         # ---- pruning (SCBFwP / FAwP) ----
@@ -160,6 +253,7 @@ def run_federated(cohort: MedicalCohort,
             pruned_so_far = original_hidden - sum(
                 pruning.hidden_sizes(new_params))
             params = new_params
+            state = dataclasses.replace(state, params=params)
 
         wall = time.perf_counter() - t0
         roc, pr = _evaluate(params, cohort.x_test, cohort.y_test)
@@ -171,11 +265,16 @@ def run_federated(cohort: MedicalCohort,
             sparse_bytes=sparse_bytes, dense_bytes=dense_bytes,
             wall_time=wall,
             flops_proxy=float(n_params) * cohort.x_train.shape[0],
-            hidden_sizes=tuple(pruning.hidden_sizes(params)))
+            hidden_sizes=tuple(pruning.hidden_sizes(params)),
+            num_participants=P,
+            epsilon=privacy.epsilon_for(cfg.dp_noise_multiplier,
+                                        cfg.dp_delta,
+                                        loops=int(dp_releases.max()))
+            if dp_on else None)
         result.records.append(rec)
         if verbose:
             print(f"[{result.method}] loop {loop:02d} "
                   f"auc_roc={roc:.4f} auc_pr={pr:.4f} "
                   f"upload={up_frac:.2%} hidden={rec.hidden_sizes} "
-                  f"t={wall:.2f}s")
+                  f"clients={P} t={wall:.2f}s")
     return result

@@ -13,6 +13,7 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm import wire
 from repro.core import channels
@@ -39,7 +40,10 @@ class UploadStats:
             for v in m.values():
                 if v is None:
                     continue
-                nnz, size = int(jnp.sum(v)), int(v.size)
+                # host numpy on purpose: masks arrive per client, and the
+                # batched engine calls this K times per round — a device
+                # reduction per mask would serialise the host loop
+                nnz, size = int(np.sum(np.asarray(v))), int(v.size)
                 up += nnz
                 total += size
                 sparse += wire.cheapest_bytes(nnz, size, itemsize=4)[1]

@@ -37,10 +37,27 @@ def scbf_update(server_params, masked_deltas: Optional[Sequence] = None,
     return jax.tree_util.tree_map(jnp.add, server_params, total)
 
 
-def fedavg_update(client_params: Sequence):
-    """W <- mean_k W_k (equal-size clients)."""
-    n = float(len(client_params))
-    summed = client_params[0]
-    for p in client_params[1:]:
-        summed = jax.tree_util.tree_map(jnp.add, summed, p)
-    return jax.tree_util.tree_map(lambda s: s / n, summed)
+def fedavg_update(client_params: Sequence, weights: Sequence = None):
+    """W <- Σ_k w_k W_k (default: equal weights, the plain mean).
+
+    ``weights`` are normalised client weights (e.g. n_k/n for McMahan's
+    example-weighted average over unequal shards).  Accumulation is
+    incremental — one running pytree, never a K-stacked copy of the
+    model — so the server-side memory cost stays O(1) in K.
+    """
+    if weights is None:
+        n = float(len(client_params))
+        summed = client_params[0]
+        for p in client_params[1:]:
+            summed = jax.tree_util.tree_map(jnp.add, summed, p)
+        return jax.tree_util.tree_map(lambda s: s / n, summed)
+    if len(weights) != len(client_params):
+        raise ValueError("one weight per client required")
+    summed = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) * float(weights[0]),
+        client_params[0])
+    for w, p in zip(weights[1:], client_params[1:]):
+        summed = jax.tree_util.tree_map(
+            lambda s, x: s + x.astype(jnp.float32) * float(w), summed, p)
+    return jax.tree_util.tree_map(
+        lambda s, ref: s.astype(ref.dtype), summed, client_params[0])

@@ -1,3 +1,4 @@
 from repro.data.medical import (
-    MedicalCohort, generate_cohort, federated_split, batch_iterator)
+    MedicalCohort, generate_cohort, federated_split, dirichlet_split,
+    batch_iterator)
 from repro.data.tokens import synthetic_lm_batch, SyntheticTokenStream

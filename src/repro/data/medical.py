@@ -109,6 +109,48 @@ def federated_split(x: np.ndarray, y: np.ndarray, num_clients: int = 5,
     return [(x[i], y[i]) for i in idx]
 
 
+def dirichlet_split(x: np.ndarray, y: np.ndarray, num_clients: int = 5,
+                    alpha: float = 0.5, seed: int = 0,
+                    min_per_client: int = 1
+                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Label-skew Dirichlet partition — heterogeneous hospital silos.
+
+    For each label class, client shares are drawn from Dir(alpha·1_K)
+    and the class's examples are dealt out accordingly: small ``alpha``
+    gives strongly non-IID silos (each hospital dominated by one
+    outcome), large ``alpha`` recovers ~IID.  Every training example is
+    assigned to exactly one client (examples are conserved); shards are
+    topped up from the largest shard so none ends below
+    ``min_per_client``.
+    """
+    if num_clients < 1:
+        raise ValueError("num_clients must be >= 1")
+    rng = np.random.default_rng(seed + 1)
+    y = np.asarray(y).reshape(-1)
+    shards: List[List[np.ndarray]] = [[] for _ in range(num_clients)]
+    for c in np.unique(y):
+        idx = np.flatnonzero(y == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(props)[:-1] * idx.size).astype(np.int64)
+        for k, part in enumerate(np.split(idx, cuts)):
+            shards[k].append(part)
+    parts = [np.concatenate(s) if s else np.array([], dtype=np.int64)
+             for s in shards]
+    # rebalance: extreme alpha can leave a client empty, which no real
+    # deployment (and no padded cohort) can represent
+    for k in range(num_clients):
+        while parts[k].size < min_per_client:
+            donor = int(np.argmax([p.size for p in parts]))
+            parts[k] = np.append(parts[k], parts[donor][-1])
+            parts[donor] = parts[donor][:-1]
+    out = []
+    for p in parts:
+        rng.shuffle(p)
+        out.append((x[p], y[p]))
+    return out
+
+
 def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int,
                    seed: int = 0, shuffle: bool = True
                    ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:

@@ -1,0 +1,9 @@
+"""Cross-device federation engine: vmapped client cohorts, round
+scheduling, and pluggable aggregation (docs/FED_ENGINE.md)."""
+from repro.fed.cohort import PaddedCohort, pad_clients
+from repro.fed.engine import (BatchedEngine, SequentialEngine, make_engine,
+                              stack_pytrees)
+from repro.fed.scheduler import (FedBuffScheduler, RoundPlan, SyncScheduler,
+                                 make_scheduler)
+from repro.fed.strategy import (FedAvg, FedBuff, RoundContribution, ScbfSum,
+                                ServerState, make_strategy)

@@ -1,0 +1,246 @@
+"""Cohort execution engines — K local trainings as one XLA program.
+
+The seed orchestrator ran its clients in a sequential Python loop: K
+jit dispatches for training, then K eager channel-selection passes,
+every global loop.  At cross-device scale (hundreds to thousands of
+sampled clients per round) the Python dispatch overhead dominates the
+actual math.  ``BatchedEngine`` stacks the sampled clients' shards into
+a padded ``(P, n_max, d)`` cohort (repro.fed.cohort) and runs
+
+    local-train  →  delta  →  channel-select  →  (optional DP noise)
+
+for every participant inside a single ``jax.vmap``-ed jit
+(``_scbf_pass``), reusing the exact ``lax.scan`` epoch bodies from
+``repro.core.client``.  Only the wire encoding (host numpy, it models
+bytes crossing the network) remains per-client.
+
+``SequentialEngine`` keeps the seed's per-client loop as the reference
+implementation: at full participation with equal shards the two produce
+the same trajectories (see tests/test_fed_engine.py), and the gap
+between them is what benchmarks/bench_fed_engine.py measures.
+
+Both engines are pure round executors: the driver (repro.core.scbf)
+owns PRNG-key derivation, scheduling and aggregation, so an engine swap
+can never change the random stream.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire
+from repro.config import ScbfConfig
+from repro.core import privacy
+from repro.core import selection as sel
+from repro.core.client import (client_delta, local_train, local_train_impl,
+                               masked_local_train_impl)
+from repro.fed.cohort import PaddedCohort, pad_clients
+
+
+def stack_pytrees(trees: Sequence):
+    """Stack a list of identically-shaped pytrees along a new axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _reveal_masks(masked, masks):
+    """Boolean reveal masks shaped exactly like the masked delta.
+
+    ``select_gradients`` reports a mask entry per layer key (``None``
+    for bias-free layers); the DP mechanism needs one boolean leaf per
+    *transmitted* leaf so noise lands on every revealed coordinate,
+    including revealed entries whose gradient is exactly zero.
+    """
+    return tuple({k: layer_masks[k] for k in layer_delta}
+                 for layer_delta, layer_masks in zip(masked, masks))
+
+
+@partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss",
+                                   "stacked_params", "upload_rate",
+                                   "selection_mode", "score_norm",
+                                   "dp_noise", "dp_clip"))
+def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, *,
+               batch_size: int, epochs: int, masked_loss: bool,
+               stacked_params: bool, upload_rate: float,
+               selection_mode: str, score_norm: bool,
+               dp_noise: float, dp_clip: float):
+    """Train + delta + channel-select (+ DP) for P clients in one vmap.
+
+    ``params`` is either one shared pytree (sync rounds) or a P-stacked
+    pytree (fedbuff: each participant trains from its own stale
+    version).  Returns (masked_deltas, masks), both P-stacked.
+    """
+    p_ax = 0 if stacked_params else None
+
+    def one(p, x, y, w, ck, sk, dk):
+        if masked_loss:
+            new_p = masked_local_train_impl(p, x, y, w, lr, ck,
+                                            batch_size=batch_size,
+                                            epochs=epochs)
+        else:
+            new_p = local_train_impl(p, x, y, lr, ck,
+                                     batch_size=batch_size, epochs=epochs)
+        g = client_delta(p, new_p)
+        masked, masks, _ = sel.select_gradients(
+            g, upload_rate, selection_mode, key=sk, score_norm=score_norm)
+        if dp_noise > 0.0:
+            masked = privacy.gaussian_mechanism(
+                tuple(masked), dk, dp_noise, dp_clip,
+                masks=_reveal_masks(masked, masks))
+        return tuple(masked), tuple(masks)
+
+    return jax.vmap(one, in_axes=(p_ax, 0, 0, 0, 0, 0, 0))(
+        params, xs, ys, ws, ckeys, skeys, dp_keys)
+
+
+@partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss"))
+def _fedavg_pass(params, xs, ys, ws, lr, ckeys, *,
+                 batch_size: int, epochs: int, masked_loss: bool):
+    """Full-weight local training for P clients in one vmap."""
+    def one(p, x, y, w, ck):
+        if masked_loss:
+            return masked_local_train_impl(p, x, y, w, lr, ck,
+                                           batch_size=batch_size,
+                                           epochs=epochs)
+        return local_train_impl(p, x, y, lr, ck,
+                                batch_size=batch_size, epochs=epochs)
+
+    return jax.vmap(one, in_axes=(None, 0, 0, 0, 0))(params, xs, ys, ws,
+                                                      ckeys)
+
+
+def _emit_payloads(masked_stacked, masks_stacked, num: int
+                   ) -> Tuple[List[wire.Payload], List[sel.UploadStats]]:
+    """One device→host transfer, then per-client wire encoding."""
+    masked_host = jax.device_get(masked_stacked)
+    masks_host = jax.device_get(masks_stacked)
+    payloads, stats = [], []
+    for i in range(num):
+        mg = tuple({kk: vv[i] for kk, vv in layer.items()}
+                   for layer in masked_host)
+        payloads.append(wire.encode(mg))
+        mk = [{kk: (None if vv is None else vv[i])
+               for kk, vv in layer.items()} for layer in masks_host]
+        stats.append(sel.UploadStats.from_masks(mk))
+    return payloads, stats
+
+
+class BatchedEngine:
+    """Vmapped padded-cohort execution: one XLA program per round."""
+
+    name = "batched"
+
+    def __init__(self, clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 batch_size: int, epochs: int):
+        self.cohort: PaddedCohort = pad_clients(clients)
+        self.counts = self.cohort.counts
+        self.batch_size = batch_size
+        self.epochs = epochs
+
+    @property
+    def num_clients(self) -> int:
+        return self.cohort.num_clients
+
+    def _gather(self, participants: np.ndarray):
+        part = np.asarray(participants)
+        if part.size == self.num_clients and \
+                np.array_equal(part, np.arange(self.num_clients)):
+            return self.cohort.x, self.cohort.y, self.cohort.w
+        return self.cohort.x[part], self.cohort.y[part], self.cohort.w[part]
+
+    def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
+                   cfg: ScbfConfig):
+        """Masked sparse uploads for every participant, one batched pass.
+
+        ``params``: one pytree (sync) or a list of per-participant
+        pytrees (fedbuff stale versions).
+        """
+        xs, ys, ws = self._gather(participants)
+        stacked = isinstance(params, list)
+        p = stack_pytrees(params) if stacked else tuple(params)
+        masked, masks = _scbf_pass(
+            p, xs, ys, ws, lr, jnp.stack(list(ckeys)),
+            jnp.stack(list(skeys)), jnp.stack(list(dp_keys)),
+            batch_size=self.batch_size, epochs=self.epochs,
+            masked_loss=not self.cohort.uniform, stacked_params=stacked,
+            upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
+            score_norm=cfg.score_norm, dp_noise=cfg.dp_noise_multiplier,
+            dp_clip=cfg.dp_clip_norm)
+        return _emit_payloads(masked, masks, len(participants))
+
+    def fedavg_round(self, params, participants, lr, ckeys):
+        """Full-weight training; returns (per-client params list, counts).
+
+        Training runs stacked in one vmap; the returned list holds
+        per-client views into that output so the aggregation strategy
+        can reduce incrementally (core.server.fedavg_update).
+        """
+        xs, ys, ws = self._gather(participants)
+        new_p = _fedavg_pass(tuple(params), xs, ys, ws, lr,
+                             jnp.stack(list(ckeys)),
+                             batch_size=self.batch_size, epochs=self.epochs,
+                             masked_loss=not self.cohort.uniform)
+        out = [jax.tree_util.tree_map(lambda l, i=i: l[i], new_p)
+               for i in range(len(participants))]
+        return out, self.counts[np.asarray(participants)]
+
+
+class SequentialEngine:
+    """The seed's per-client Python loop, kept as the reference path."""
+
+    name = "sequential"
+
+    def __init__(self, clients: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 batch_size: int, epochs: int):
+        self.clients = [(jnp.asarray(x), jnp.asarray(y)) for x, y in clients]
+        self.counts = np.array([x.shape[0] for x, _ in clients],
+                               dtype=np.int64)
+        self.batch_size = batch_size
+        self.epochs = epochs
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
+                   cfg: ScbfConfig):
+        stacked = isinstance(params, list)
+        payloads, stats = [], []
+        for i, k in enumerate(participants):
+            p0 = tuple(params[i]) if stacked else tuple(params)
+            xc, yc = self.clients[int(k)]
+            new_p = local_train(p0, xc, yc, lr, ckeys[i],
+                                batch_size=self.batch_size,
+                                epochs=self.epochs)
+            g = client_delta(p0, new_p)
+            masked, masks, _ = sel.select_gradients(
+                g, cfg.upload_rate, cfg.selection, key=skeys[i],
+                score_norm=cfg.score_norm)
+            if cfg.dp_noise_multiplier > 0.0:
+                masked = privacy.gaussian_mechanism(
+                    tuple(masked), dp_keys[i], cfg.dp_noise_multiplier,
+                    cfg.dp_clip_norm, masks=_reveal_masks(masked, masks))
+            payloads.append(wire.encode(tuple(masked)))
+            stats.append(sel.UploadStats.from_masks(masks))
+        return payloads, stats
+
+    def fedavg_round(self, params, participants, lr, ckeys):
+        outs = []
+        for i, k in enumerate(participants):
+            xc, yc = self.clients[int(k)]
+            outs.append(local_train(tuple(params), xc, yc, lr, ckeys[i],
+                                    batch_size=self.batch_size,
+                                    epochs=self.epochs))
+        return outs, self.counts[np.asarray(participants)]
+
+
+ENGINES = {"batched": BatchedEngine, "sequential": SequentialEngine}
+
+
+def make_engine(kind: str, clients, batch_size: int, epochs: int):
+    if kind not in ENGINES:
+        raise ValueError(f"unknown engine {kind!r}; one of {sorted(ENGINES)}")
+    return ENGINES[kind](clients, batch_size, epochs)

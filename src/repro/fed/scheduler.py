@@ -1,0 +1,143 @@
+"""Round scheduling — who trains, who reports, and how stale they are.
+
+Two modes, matching the cross-device regimes surveyed in the healthcare
+FL literature (PAPERS.md):
+
+``sync``     classic FedAvg-style rounds: sample ``sample_fraction`` of
+             the K clients, lose some to dropout, and (optionally) drop
+             stragglers that miss the round deadline.  Every reported
+             update has staleness 0.
+
+``fedbuff``  buffered asynchronous rounds (FedBuff-style): up to
+             ``concurrency`` clients train concurrently, each pinned to
+             the server version it started from.  Each tick some finish
+             (stragglers finish more slowly), report an update with
+             staleness τ = current_version − start_version, and idle
+             clients are restarted.  The server applies the buffer once
+             ``buffer_size`` uploads accumulate (repro.fed.strategy).
+
+Both schedulers draw from one seeded ``numpy`` Generator, so a fixed
+seed reproduces the exact participation trace — dropout, stragglers,
+staleness and all (tests/test_fed_engine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Set, Tuple
+
+import numpy as np
+
+from repro.config import FedConfig
+
+# Per-tick completion probabilities for the fedbuff simulation: a fast
+# client usually reports within ~1 tick; a straggler takes ~4, which is
+# what makes staleness > 0 actually occur.
+FAST_COMPLETION_PROB = 0.8
+STRAGGLER_COMPLETION_PROB = 0.25
+
+
+@dataclass
+class RoundPlan:
+    """One round's participation trace (host-side, all numpy)."""
+
+    round_index: int
+    participants: np.ndarray      # client ids whose updates arrive
+    staleness: np.ndarray         # (P,) server-version lag per participant
+    sampled: np.ndarray           # invited (sync) / newly started (fedbuff)
+    dropped: np.ndarray           # lost to dropout this round
+    stragglers: np.ndarray        # flagged slow this round
+
+    @property
+    def num_participants(self) -> int:
+        return int(self.participants.size)
+
+
+class SyncScheduler:
+    """Per-round client sampling with dropout and deadline stragglers."""
+
+    def __init__(self, num_clients: int, cfg: FedConfig, seed: int = 0):
+        self.num_clients = num_clients
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+
+    def plan(self, round_index: int, server_version: int = 0) -> RoundPlan:
+        cfg, rng = self.cfg, self.rng
+        m = max(1, int(round(cfg.sample_fraction * self.num_clients)))
+        m = min(m, self.num_clients)
+        sampled = np.sort(rng.choice(self.num_clients, size=m,
+                                     replace=False))
+        drop = rng.random(m) < cfg.dropout_rate
+        strag = rng.random(m) < cfg.straggler_rate
+        lost = drop | (strag if cfg.drop_stragglers
+                       else np.zeros(m, dtype=bool))
+        participants = sampled[~lost]
+        return RoundPlan(
+            round_index=round_index,
+            participants=participants,
+            staleness=np.zeros(participants.size, dtype=np.int64),
+            sampled=sampled,
+            dropped=sampled[drop],
+            stragglers=sampled[strag])
+
+    def referenced_versions(self) -> Set[int]:
+        return set()                       # sync trains on the current version
+
+
+class FedBuffScheduler:
+    """Buffered-async participation: concurrent clients, stale reports."""
+
+    def __init__(self, num_clients: int, cfg: FedConfig, seed: int = 0):
+        self.num_clients = num_clients
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        # client id -> (start_version, is_straggler)
+        self.in_flight: Dict[int, Tuple[int, bool]] = {}
+
+    def plan(self, round_index: int, server_version: int = 0) -> RoundPlan:
+        cfg, rng = self.cfg, self.rng
+        # refill: start idle clients at the current server version
+        idle = sorted(set(range(self.num_clients)) - set(self.in_flight))
+        space = max(0, cfg.concurrency - len(self.in_flight))
+        n_start = min(space, len(idle))
+        started = np.sort(rng.choice(idle, size=n_start, replace=False)) \
+            if n_start else np.array([], dtype=np.int64)
+        for k in started:
+            self.in_flight[int(k)] = (server_version,
+                                      bool(rng.random() < cfg.straggler_rate))
+        # drain: aborts, then completions
+        done, dropped, stragglers = [], [], []
+        for k, (v0, slow) in list(self.in_flight.items()):
+            if slow:
+                stragglers.append(k)
+            if rng.random() < cfg.dropout_rate:
+                dropped.append(k)
+                del self.in_flight[k]
+                continue
+            p_done = STRAGGLER_COMPLETION_PROB if slow \
+                else FAST_COMPLETION_PROB
+            if rng.random() < p_done:
+                done.append((k, server_version - v0))
+                del self.in_flight[k]
+        done.sort()
+        participants = np.array([k for k, _ in done], dtype=np.int64)
+        staleness = np.array([t for _, t in done], dtype=np.int64)
+        return RoundPlan(
+            round_index=round_index,
+            participants=participants,
+            staleness=staleness,
+            sampled=started,
+            dropped=np.array(sorted(dropped), dtype=np.int64),
+            stragglers=np.array(sorted(stragglers), dtype=np.int64))
+
+    def referenced_versions(self) -> Set[int]:
+        """Server versions some in-flight client is still training from
+        (the driver keeps those param snapshots alive)."""
+        return {v0 for v0, _ in self.in_flight.values()}
+
+
+def make_scheduler(cfg: FedConfig, num_clients: int, seed: int = 0):
+    if cfg.mode == "sync":
+        return SyncScheduler(num_clients, cfg, seed)
+    if cfg.mode == "fedbuff":
+        return FedBuffScheduler(num_clients, cfg, seed)
+    raise ValueError(f"unknown federation mode {cfg.mode!r}; sync|fedbuff")

@@ -1,0 +1,155 @@
+"""Pluggable server aggregation — ``ServerState``-carrying strategies.
+
+The seed hard-wired two update rules inside the orchestrator loop
+(sum-of-masked-deltas for SCBF, plain mean for FedAvg).  Strategies
+make the server side a value: ``aggregate(state, contribution)`` maps
+one round's client uploads to a new ``ServerState``, so schedulers and
+engines compose with any aggregation rule.
+
+``scbf_sum``   W ← W + Σ_k ΔW̃_k — the paper's Algorithm 1, applied via
+               ``comm.wire.apply_payloads`` (no K dense deltas).
+``fedavg``     W ← Σ_k (n_k/n) W_k — example-weighted McMahan mean
+               (equal shards reduce to the seed's plain mean).
+``fedbuff``    buffered async: decoded deltas are weighted by
+               (1+τ)^−γ (τ = staleness, γ = ``staleness_exponent``) and
+               accumulated; once ``buffer_size`` uploads are buffered
+               the server steps by ``server_lr`` × the buffer mean and
+               bumps its version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire
+from repro.config import FedConfig, ScbfConfig
+from repro.core import server
+
+
+@dataclass
+class ServerState:
+    params: Any                      # current global model
+    version: int = 0                 # bumps on every applied update
+    buffer_sum: Any = None           # fedbuff: Σ weighted decoded deltas
+    buffer_count: int = 0            # fedbuff: uploads buffered so far
+
+
+@dataclass
+class RoundContribution:
+    """Everything one round's participants handed to the server."""
+
+    num_examples: np.ndarray                   # (P,) shard sizes
+    staleness: np.ndarray                      # (P,) server-version lag
+    payloads: Optional[List[wire.Payload]] = None   # sparse scbf uploads
+    client_params: Optional[List[Any]] = None  # per-client full weights
+
+
+class ScbfSum:
+    """The paper's server rule: sum the sparse masked deltas in place."""
+
+    name = "scbf_sum"
+
+    def init(self, params) -> ServerState:
+        return ServerState(params=params)
+
+    def aggregate(self, state: ServerState,
+                  contrib: RoundContribution) -> ServerState:
+        if not contrib.payloads:
+            return state
+        params = wire.apply_payloads(state.params, contrib.payloads)
+        return dataclasses.replace(state, params=params,
+                                   version=state.version + 1)
+
+
+class FedAvg:
+    """Example-weighted weight averaging over the reporting cohort.
+
+    Wraps ``core.server.fedavg_update``, which accumulates one running
+    pytree — the K client models are never stacked server-side.
+    """
+
+    name = "fedavg"
+
+    def init(self, params) -> ServerState:
+        return ServerState(params=params)
+
+    def aggregate(self, state: ServerState,
+                  contrib: RoundContribution) -> ServerState:
+        if not contrib.client_params:
+            return state
+        n = contrib.num_examples.astype(np.float64)
+        params = server.fedavg_update(contrib.client_params,
+                                      weights=n / n.sum())
+        return dataclasses.replace(state, params=params,
+                                   version=state.version + 1)
+
+
+class FedBuff:
+    """Staleness-weighted buffered-async aggregation."""
+
+    name = "fedbuff"
+
+    def __init__(self, buffer_size: int = 10,
+                 staleness_exponent: float = 0.5, server_lr: float = 1.0):
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        self.buffer_size = buffer_size
+        self.staleness_exponent = staleness_exponent
+        self.server_lr = server_lr
+
+    def init(self, params) -> ServerState:
+        return ServerState(params=params)
+
+    def staleness_weight(self, staleness) -> float:
+        """(1+τ)^−γ — a version-0-fresh upload weighs 1, stale ones less."""
+        return float((1.0 + float(staleness)) ** -self.staleness_exponent)
+
+    def aggregate(self, state: ServerState,
+                  contrib: RoundContribution) -> ServerState:
+        """Fold uploads one at a time, stepping the server *each* time
+        the buffer reaches ``buffer_size`` (FedBuff's per-upload
+        trigger) — a big round can flush more than once, and trailing
+        uploads buffer against the advanced version.  (Their staleness
+        was measured at plan time, so within-round trailing uploads are
+        under-counted by at most the flushes that round.)
+        """
+        if not contrib.payloads:
+            return state
+        params, version = state.params, state.version
+        buf, count = state.buffer_sum, state.buffer_count
+        for payload, tau in zip(contrib.payloads, contrib.staleness):
+            delta = wire.decode(payload)
+            wgt = self.staleness_weight(tau)
+            scaled = jax.tree_util.tree_map(
+                lambda d: d.astype(jnp.float32) * wgt, delta)
+            buf = scaled if buf is None else jax.tree_util.tree_map(
+                jnp.add, buf, scaled)
+            count += 1
+            if count >= self.buffer_size:
+                step = self.server_lr / count
+                params = jax.tree_util.tree_map(
+                    lambda p, b: (p.astype(jnp.float32)
+                                  + step * b).astype(p.dtype),
+                    params, buf)
+                version += 1
+                buf, count = None, 0
+        return dataclasses.replace(state, params=params, version=version,
+                                   buffer_sum=buf, buffer_count=count)
+
+
+def make_strategy(method: str, scbf_cfg: ScbfConfig, fed_cfg: FedConfig):
+    """Strategy for (method, mode): fedbuff wraps the sparse scbf path."""
+    if fed_cfg.mode == "fedbuff":
+        return FedBuff(buffer_size=fed_cfg.buffer_size,
+                       staleness_exponent=fed_cfg.staleness_exponent,
+                       server_lr=fed_cfg.server_lr)
+    if method == "scbf":
+        return ScbfSum()
+    if method == "fedavg":
+        return FedAvg()
+    raise ValueError(f"no strategy for method {method!r}")

@@ -30,13 +30,20 @@ import numpy as np
 
 def run_medical(args):
     import jax
-    from repro.config import ScbfConfig, TrainConfig
+    from repro.config import FedConfig, ScbfConfig, TrainConfig
     from repro.core.scbf import run_federated
     from repro.data.medical import generate_cohort
 
     cohort = generate_cohort(seed=args.seed)
     os.makedirs(args.out, exist_ok=True)
     results = {}
+    fed = FedConfig(
+        engine=getattr(args, "engine", "batched"),
+        sample_fraction=getattr(args, "sample_fraction", 1.0),
+        dropout_rate=getattr(args, "dropout_rate", 0.0),
+        straggler_rate=getattr(args, "straggler_rate", 0.0),
+        partition=getattr(args, "partition", "iid"),
+        dirichlet_alpha=getattr(args, "dirichlet_alpha", 0.5))
     for method in args.methods.split(","):
         base = method.replace("wp", "")
         prune = method.endswith("wp")
@@ -51,7 +58,10 @@ def run_medical(args):
                             selection=args.selection,
                             num_clients=args.clients, prune=prune,
                             prune_rate=args.prune_rate,
-                            prune_total=args.prune_total))
+                            prune_total=args.prune_total,
+                            dp_noise_multiplier=getattr(
+                                args, "dp_noise", 0.0)),
+            fed=fed)
         res = run_federated(cohort, cfg, method=base, verbose=True)
         results[method] = res
         path = os.path.join(args.out, f"{res.method}.csv")
@@ -59,12 +69,15 @@ def run_medical(args):
             w = csv.writer(f)
             w.writerow(["loop", "auc_roc", "auc_pr", "upload_fraction",
                         "sparse_bytes", "dense_bytes", "wall_time",
-                        "flops_proxy", "hidden_sizes"])
+                        "flops_proxy", "hidden_sizes", "participants",
+                        "epsilon"])
             for r in res.records:
                 w.writerow([r.loop, r.auc_roc, r.auc_pr, r.upload_fraction,
                             r.sparse_bytes, r.dense_bytes, r.wall_time,
                             r.flops_proxy,
-                            "x".join(map(str, r.hidden_sizes))])
+                            "x".join(map(str, r.hidden_sizes)),
+                            r.num_participants,
+                            "" if r.epsilon is None else r.epsilon])
         print(f"[{res.method}] best auc_roc={res.best('auc_roc'):.4f} "
               f"auc_pr={res.best('auc_pr'):.4f} "
               f"time={res.total_time():.1f}s upload={res.total_upload_bytes()/1e6:.1f}MB")
@@ -120,6 +133,17 @@ def main():
     ap.add_argument("--prune-total", type=float, default=0.47)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/medical")
+    # cross-device federation scenarios (docs/FED_ENGINE.md)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "sequential"])
+    ap.add_argument("--sample-fraction", type=float, default=1.0)
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--straggler-rate", type=float, default=0.0)
+    ap.add_argument("--partition", default="iid",
+                    choices=["iid", "dirichlet"])
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="DP noise multiplier on scbf uploads (0 = off)")
     # lm mode
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--steps", type=int, default=100)

@@ -62,10 +62,16 @@ def auc_pr(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(ap).astype(jnp.float32)
 
 
+def bce_elementwise(logits: jnp.ndarray, labels: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Numerically-stable per-example BCE from logits (no reduction)."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return (jnp.maximum(logits, 0) - logits * labels +
+            jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
 def binary_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
                          ) -> jnp.ndarray:
     """Numerically-stable mean BCE from logits."""
-    logits = logits.reshape(-1).astype(jnp.float32)
-    labels = labels.reshape(-1).astype(jnp.float32)
-    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
-                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return jnp.mean(bce_elementwise(logits.reshape(-1), labels.reshape(-1)))

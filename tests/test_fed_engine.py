@@ -1,0 +1,309 @@
+"""The federation engine: vmapped cohorts, scheduling, aggregation, DP."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import wire
+from repro.config import FedConfig, ScbfConfig, TrainConfig
+from repro.core.scbf import run_federated
+from repro.data.medical import dirichlet_split, generate_cohort
+from repro.fed.cohort import pad_clients
+from repro.fed.scheduler import FedBuffScheduler, SyncScheduler, make_scheduler
+from repro.fed.strategy import (FedBuff, RoundContribution, ScbfSum,
+                                make_strategy)
+from repro.models.mlp_net import init_mlp
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return generate_cohort(num_admissions=800, num_medicines=40,
+                           num_risk_medicines=15, num_interactions=4, seed=0)
+
+
+FEATS = (40, 16, 4, 1)
+
+
+def _tcfg(**scbf_kw):
+    return TrainConfig(learning_rate=0.05, global_loops=2,
+                       local_batch_size=64, local_epochs=1,
+                       scbf=ScbfConfig(upload_rate=0.1, num_clients=5,
+                                       **scbf_kw))
+
+
+# ---------------------------------------------------------------------------
+# engine parity: the tentpole acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential_full_participation(cohort):
+    """K=5, full participation: the vmapped engine reproduces the
+    sequential loop — same AUC trajectory and identical wire bytes."""
+    tcfg = _tcfg()
+    seq = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS,
+                        engine="sequential")
+    bat = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS,
+                        engine="batched")
+    for a, b in zip(seq.records, bat.records):
+        np.testing.assert_allclose(a.auc_roc, b.auc_roc, atol=1e-6)
+        np.testing.assert_allclose(a.auc_pr, b.auc_pr, atol=1e-6)
+        assert a.sparse_bytes == b.sparse_bytes
+        assert a.dense_bytes == b.dense_bytes
+        assert a.upload_fraction == b.upload_fraction
+
+
+def test_batched_matches_sequential_fedavg(cohort):
+    tcfg = _tcfg()
+    seq = run_federated(cohort, tcfg, method="fedavg", mlp_features=FEATS,
+                        engine="sequential")
+    bat = run_federated(cohort, tcfg, method="fedavg", mlp_features=FEATS,
+                        engine="batched")
+    for a, b in zip(seq.records, bat.records):
+        np.testing.assert_allclose(a.auc_roc, b.auc_roc, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# padded cohorts
+# ---------------------------------------------------------------------------
+
+def test_pad_clients_shapes_and_masks():
+    rng = np.random.default_rng(0)
+    clients = [(rng.random((n, 7)).astype(np.float32),
+                rng.integers(0, 2, n).astype(np.float32))
+               for n in (10, 4, 7)]
+    pc = pad_clients(clients)
+    assert pc.x.shape == (3, 10, 7) and pc.w.shape == (3, 10)
+    assert list(pc.counts) == [10, 4, 7]
+    assert not pc.uniform
+    np.testing.assert_array_equal(np.asarray(pc.w).sum(axis=1), [10, 4, 7])
+    # padded rows are zero
+    assert float(jnp.abs(pc.x[1, 4:]).sum()) == 0.0
+    # equal shards -> no padding -> uniform fast path
+    assert pad_clients([c for c in clients if c[0].shape[0] == 10]
+                       + [(clients[0][0].copy(), clients[0][1].copy())]
+                       ).uniform
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet non-IID partitioning
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_split_conserves_examples(cohort):
+    parts = dirichlet_split(cohort.x_train, cohort.y_train, 6,
+                            alpha=0.3, seed=0)
+    assert sum(p[0].shape[0] for p in parts) == cohort.x_train.shape[0]
+    assert all(p[0].shape[0] >= 1 for p in parts)
+    # every original example appears exactly once (row multisets match)
+    total_pos = sum(float(p[1].sum()) for p in parts)
+    assert total_pos == float(cohort.y_train.sum())
+
+
+def test_dirichlet_split_hits_requested_heterogeneity(cohort):
+    def mean_max_label_share(alpha):
+        parts = dirichlet_split(cohort.x_train, cohort.y_train, 6,
+                                alpha=alpha, seed=0)
+        shares = []
+        for _, y in parts:
+            p1 = float(y.mean())
+            shares.append(max(p1, 1.0 - p1))
+        return np.mean(shares)
+
+    skewed, iid_like = mean_max_label_share(0.05), mean_max_label_share(100.0)
+    assert skewed > iid_like + 0.05    # low alpha => label-dominated silos
+
+
+# ---------------------------------------------------------------------------
+# schedulers
+# ---------------------------------------------------------------------------
+
+def test_sync_sampling_determinism():
+    cfg = FedConfig(sample_fraction=0.4, dropout_rate=0.2,
+                    straggler_rate=0.2)
+    a = SyncScheduler(20, cfg, seed=7)
+    b = SyncScheduler(20, cfg, seed=7)
+    c = SyncScheduler(20, cfg, seed=8)
+    plans_a = [a.plan(i) for i in range(10)]
+    plans_b = [b.plan(i) for i in range(10)]
+    plans_c = [c.plan(i) for i in range(10)]
+    for pa, pb in zip(plans_a, plans_b):
+        np.testing.assert_array_equal(pa.participants, pb.participants)
+        np.testing.assert_array_equal(pa.sampled, pb.sampled)
+        np.testing.assert_array_equal(pa.dropped, pb.dropped)
+    assert any(not np.array_equal(pa.sampled, pc.sampled)
+               for pa, pc in zip(plans_a, plans_c))
+    # sampling honours the fraction; participants never exceed the sample
+    for p in plans_a:
+        assert p.sampled.size == 8
+        assert p.participants.size <= p.sampled.size
+        assert np.all(np.isin(p.participants, p.sampled))
+        assert np.all(p.staleness == 0)
+
+
+def test_fedbuff_scheduler_determinism_and_staleness():
+    cfg = FedConfig(mode="fedbuff", concurrency=6, straggler_rate=0.5)
+    a = make_scheduler(cfg, 12, seed=3)
+    b = make_scheduler(cfg, 12, seed=3)
+    assert isinstance(a, FedBuffScheduler)
+    saw_stale = False
+    for i in range(12):
+        pa, pb = a.plan(i, i), b.plan(i, i)
+        np.testing.assert_array_equal(pa.participants, pb.participants)
+        np.testing.assert_array_equal(pa.staleness, pb.staleness)
+        saw_stale |= bool(np.any(pa.staleness > 0))
+        # never more in flight than concurrency allows
+        assert len(a.in_flight) <= cfg.concurrency
+    assert saw_stale                    # stragglers actually produce lag
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+def _payload_of(tree):
+    return wire.encode(tree)
+
+
+def test_fedbuff_staleness_weighting():
+    params = init_mlp((4, 3, 1), jax.random.PRNGKey(0))
+    d0 = jax.tree_util.tree_map(jnp.ones_like, params)
+    d1 = jax.tree_util.tree_map(lambda x: 2.0 * jnp.ones_like(x), params)
+    strat = FedBuff(buffer_size=2, staleness_exponent=0.5, server_lr=1.0)
+    state = strat.init(params)
+    contrib = RoundContribution(
+        num_examples=np.array([10, 10]),
+        staleness=np.array([0, 3]),
+        payloads=[_payload_of(d0), _payload_of(d1)])
+    new = strat.aggregate(state, contrib)
+    assert new.version == 1 and new.buffer_count == 0
+    # expected step: (1*d0 + (1+3)^-0.5 * d1) / 2 = (1 + 0.5*2)/2 = 1.0
+    expect = jax.tree_util.tree_map(lambda p: p + 1.0, params)
+    for got, exp in zip(jax.tree_util.tree_leaves(new.params),
+                        jax.tree_util.tree_leaves(expect)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=1e-6)
+
+
+def test_fedbuff_buffers_until_full():
+    params = init_mlp((4, 3, 1), jax.random.PRNGKey(0))
+    d = jax.tree_util.tree_map(jnp.ones_like, params)
+    strat = FedBuff(buffer_size=3)
+    state = strat.init(params)
+    one = RoundContribution(num_examples=np.array([5]),
+                            staleness=np.array([0]),
+                            payloads=[_payload_of(d)])
+    state = strat.aggregate(state, one)
+    assert state.version == 0 and state.buffer_count == 1
+    for leaf0, leaf in zip(jax.tree_util.tree_leaves(params),
+                           jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(leaf0), np.asarray(leaf))
+
+
+def test_fedbuff_flushes_per_upload_not_per_round():
+    """One oversized round must flush at the buffer_size-th upload and
+    keep buffering the trailing uploads against the advanced version."""
+    params = init_mlp((4, 3, 1), jax.random.PRNGKey(0))
+    d = jax.tree_util.tree_map(jnp.ones_like, params)
+    strat = FedBuff(buffer_size=2)
+    contrib = RoundContribution(
+        num_examples=np.array([5, 5, 5]),
+        staleness=np.array([0, 0, 0]),
+        payloads=[_payload_of(d)] * 3)
+    state = strat.aggregate(strat.init(params), contrib)
+    assert state.version == 1            # exactly one flush (not 0, not 17-style)
+    assert state.buffer_count == 1       # third upload carried over
+    for p0, p1 in zip(jax.tree_util.tree_leaves(params),
+                      jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p0) + 1.0,
+                                   rtol=1e-6)
+
+
+def test_dp_refuses_fedavg(cohort):
+    tcfg = _tcfg(dp_noise_multiplier=1.0)
+    with pytest.raises(ValueError):
+        run_federated(cohort, tcfg, method="fedavg", mlp_features=FEATS)
+
+
+def test_scbf_sum_strategy_matches_wire_apply():
+    params = init_mlp((4, 3, 1), jax.random.PRNGKey(0))
+    d = jax.tree_util.tree_map(jnp.ones_like, params)
+    strat = make_strategy("scbf", ScbfConfig(), FedConfig())
+    assert isinstance(strat, ScbfSum)
+    state = strat.aggregate(strat.init(params), RoundContribution(
+        num_examples=np.array([5]), staleness=np.array([0]),
+        payloads=[_payload_of(d)]))
+    for p0, p1 in zip(jax.tree_util.tree_leaves(params),
+                      jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p0) + 1.0,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scenario runs through the driver
+# ---------------------------------------------------------------------------
+
+def test_sampling_and_dropout_run_deterministically(cohort):
+    fed = FedConfig(sample_fraction=0.5, dropout_rate=0.25)
+    tcfg = dataclasses.replace(
+        _tcfg(), fed=fed,
+        scbf=ScbfConfig(upload_rate=0.1, num_clients=8))
+    a = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS)
+    b = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS)
+    assert [r.num_participants for r in a.records] == \
+        [r.num_participants for r in b.records]
+    assert [r.auc_roc for r in a.records] == [r.auc_roc for r in b.records]
+    assert all(r.num_participants <= 4 for r in a.records)
+
+
+def test_dp_noise_reports_epsilon(cohort):
+    tcfg = _tcfg(dp_noise_multiplier=1.0, dp_clip_norm=1.0)
+    res = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS)
+    eps = [r.epsilon for r in res.records]
+    assert all(e is not None and np.isfinite(e) for e in eps)
+    assert eps[1] > eps[0]              # composition accumulates
+    assert res.final_epsilon == eps[-1]
+    assert res.dp_delta == tcfg.scbf.dp_delta
+    # DP off -> no epsilon reported
+    res0 = run_federated(cohort, _tcfg(), method="scbf", mlp_features=FEATS)
+    assert res0.final_epsilon is None and res0.dp_delta is None
+
+
+def test_dp_noises_every_revealed_coordinate():
+    """A revealed entry whose gradient is exactly zero must still ship
+    noised — otherwise it leaks its exact value and the reported (ε, δ)
+    is unsound."""
+    from repro.core.privacy import gaussian_mechanism
+    tree = ({"w": jnp.array([[0.0, 0.5], [0.0, 0.25]]),
+             "b": jnp.array([0.0, 0.1])},)
+    masks = ({"w": jnp.array([[True, True], [False, True]]),
+              "b": jnp.array([True, True])},)
+    out = gaussian_mechanism(tree, jax.random.PRNGKey(0), 1.0, 1.0,
+                             masks=masks)
+    w, b = np.asarray(out[0]["w"]), np.asarray(out[0]["b"])
+    assert w[0, 0] != 0.0 and b[0] != 0.0   # revealed zeros are noised
+    assert w[1, 0] == 0.0                    # unrevealed entries stay zero
+
+
+def test_fedbuff_end_to_end_smoke(cohort):
+    fed = FedConfig(mode="fedbuff", buffer_size=4, concurrency=6,
+                    straggler_rate=0.3)
+    tcfg = dataclasses.replace(
+        TrainConfig(learning_rate=0.05, global_loops=3,
+                    local_batch_size=64, local_epochs=1,
+                    scbf=ScbfConfig(upload_rate=0.1, num_clients=8)),
+        fed=fed)
+    res = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS)
+    assert len(res.records) == 3
+    assert all(0.0 <= r.auc_roc <= 1.0 for r in res.records)
+    with pytest.raises(ValueError):
+        run_federated(cohort, tcfg, method="fedavg", mlp_features=FEATS)
+
+
+def test_dirichlet_cohort_trains_batched(cohort):
+    fed = FedConfig(partition="dirichlet", dirichlet_alpha=0.3)
+    tcfg = dataclasses.replace(_tcfg(), fed=fed)
+    res = run_federated(cohort, tcfg, method="scbf", mlp_features=FEATS,
+                        engine="batched")
+    assert len(res.records) == 2
+    assert all(0.0 < r.upload_fraction < 1.0 for r in res.records)
+    assert all(r.sparse_bytes < r.dense_bytes for r in res.records)
