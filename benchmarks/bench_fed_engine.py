@@ -1,29 +1,55 @@
 """Federation-engine scaling: vmapped cohort vs. sequential client loop.
 
-Measures one full SCBF round — local training, channel selection, wire
-encoding — for K ∈ {5, 50, 500} clients under both engines, and
-reports the per-round wall clock plus the batched/sequential speedup.
+Three sections, all emitted in the repo's ``name,us_per_call,derived``
+CSV convention (benchmarks/common.py) and optionally as one JSON blob
+(``--json-out``, written by the CI bench-smoke job as
+BENCH_fed_engine.json so the perf trajectory accumulates):
+
+1. **K-scaling** — one full SCBF round (local training, channel
+   selection, wire encoding) for K ∈ {5, 50, 500} clients under both
+   engines, per-round wall clock + batched/sequential speedup.
+2. **Compile counts** — a seeded 30-round participation trace with
+   ``sample_fraction=0.5`` and nonzero dropout, replayed under the
+   ``exact`` (pre-bucketing) and ``pow2`` bucket policies: the exact
+   policy compiles ``_scbf_pass`` once per distinct P, pow2 once per
+   bucket (the tentpole fix).
+3. **Pod scaling** (``--pods N``) — the bucketed round sharded over a
+   pod mesh vs. single-device.  ``--pods`` forces the host device
+   count, so it must be given on the command line (the flag is applied
+   before jax is imported).
 
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick
+    PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --pods 4
     PYTHONPATH=src python -m benchmarks.bench_fed_engine          # larger shards
-
-Output is the repo's ``name,us_per_call,derived`` CSV convention
-(benchmarks/common.py).  The sequential engine pays K jit dispatches +
-K eager selection passes per round; the batched engine runs the whole
-cohort as one XLA program, so the gap widens roughly linearly in K.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
+# --pods shards the cohort over forced host devices; the flag must take
+# effect before the FIRST jax import (jax locks the device count), so
+# pre-parse it here, ahead of everything that pulls in jax.
+_pre = argparse.ArgumentParser(add_help=False)
+_pre.add_argument("--pods", type=int, default=1)
+_PODS = max(1, _pre.parse_known_args()[0].pods)
+if _PODS > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_PODS}")
+
+# ruff: noqa: E402
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.config import ScbfConfig
-from repro.fed.engine import make_engine
+from repro.config import FedConfig, ScbfConfig
+from repro.fed.cohort import bucket_size
+from repro.fed.engine import (make_engine, reset_scbf_compile_count,
+                              scbf_compile_count)
+from repro.fed.scheduler import SyncScheduler
 from repro.models.mlp_net import init_mlp
 
 
@@ -42,6 +68,7 @@ def time_round(eng, params, cfg, lr, K, batch_size, iters: int = 3):
     part = np.arange(K)
     key = jax.random.PRNGKey(0)
     times = []
+    payloads = []
     for it in range(iters + 1):                 # first round = compile warmup
         key, kc, ks, kd = jax.random.split(key, 4)
         ckeys = jax.random.split(kc, K)
@@ -58,6 +85,7 @@ def time_round(eng, params, cfg, lr, K, batch_size, iters: int = 3):
 
 
 def run(quick: bool = True, cohort_sizes=(5, 50, 500)):
+    """Section 1: per-round K-scaling, sequential vs batched."""
     n_per_client = 64 if quick else 512
     d = 128 if quick else 512
     feats = (d, 32, 8, 1) if quick else (d, 128, 32, 1)
@@ -74,14 +102,91 @@ def run(quick: bool = True, cohort_sizes=(5, 50, 500)):
         t_seq, p_seq = time_round(seq, params, cfg, lr, K, batch_size)
         t_bat, p_bat = time_round(bat, params, cfg, lr, K, batch_size)
         speedup = t_seq / t_bat
-        assert sum(p.nbytes for p in p_seq) == sum(p.nbytes for p in p_bat), \
+        upload = sum(p.nbytes for p in p_bat)
+        assert sum(p.nbytes for p in p_seq) == upload, \
             "engines must ship identical bytes"
         emit(f"fed_round_seq_K{K}", t_seq * 1e6,
              f"clients={K};n_per_client={n_per_client}")
         emit(f"fed_round_batched_K{K}", t_bat * 1e6,
-             f"clients={K};speedup_vs_seq={speedup:.1f}x")
-        rows.append((K, t_seq, t_bat, speedup))
+             f"clients={K};speedup_vs_seq={speedup:.1f}x;"
+             f"upload_bytes={upload}")
+        rows.append({"K": K, "seq_s": t_seq, "batched_s": t_bat,
+                     "speedup": speedup, "upload_bytes": upload})
     return rows
+
+
+def run_compile_counts(quick: bool = True, rounds: int = 30,
+                       K: int = 32, seed: int = 0):
+    """Section 2: compile-per-bucket vs compile-per-P on a varying-P
+    trace — the recompile bug the bucketed engine fixes."""
+    n_per_client = 32 if quick else 256
+    d = 64 if quick else 256
+    feats = (d, 16, 4, 1) if quick else (d, 64, 16, 1)
+    batch_size = 16 if quick else 64
+    cfg = ScbfConfig(upload_rate=0.10, num_clients=K)
+    fed = FedConfig(sample_fraction=0.5, dropout_rate=0.2)
+    clients = _synthetic_clients(K, n_per_client, d)
+    params = init_mlp(feats, jax.random.PRNGKey(1))
+
+    out = {}
+    for policy in ("exact", "pow2"):
+        eng = make_engine("batched", clients, batch_size, epochs=1,
+                          bucket=policy)
+        sched = SyncScheduler(K, fed, seed=seed)   # same trace both policies
+        key = jax.random.PRNGKey(seed)
+        reset_scbf_compile_count()
+        seen_p, seen_buckets, upload = set(), set(), 0
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            plan = sched.plan(r)
+            P = plan.num_participants
+            if not P:
+                continue
+            seen_p.add(P)
+            seen_buckets.add(bucket_size(P, K, policy))
+            key, kc, ks, kd = jax.random.split(key, 4)
+            payloads, _ = eng.scbf_round(
+                params, plan.participants, 0.05,
+                jax.random.split(kc, P), jax.random.split(ks, P),
+                jax.random.split(kd, P), cfg)
+            upload += sum(p.nbytes for p in payloads)
+        wall = time.perf_counter() - t0
+        compiles = scbf_compile_count()
+        emit(f"fed_compiles_{policy}", wall / rounds * 1e6,
+             f"rounds={rounds};distinct_P={len(seen_p)};"
+             f"compiles={compiles};upload_bytes={upload}")
+        out[policy] = {"rounds": rounds, "distinct_P": len(seen_p),
+                       "distinct_buckets": len(seen_buckets),
+                       "compiles": compiles, "total_s": wall,
+                       "upload_bytes": upload}
+    assert out["pow2"]["compiles"] <= out["pow2"]["distinct_buckets"], \
+        "bucketed engine must compile at most once per bucket"
+    return out
+
+
+def run_pod_scaling(quick: bool = True, pods: int = 1):
+    """Section 3: bucketed round sharded over a pod mesh vs one device."""
+    if pods <= 1:
+        return None
+    K = 64 if quick else 128
+    n_per_client = 64 if quick else 256
+    d = 128 if quick else 256
+    feats = (d, 32, 8, 1)
+    batch_size = 32
+    cfg = ScbfConfig(upload_rate=0.10, num_clients=K)
+    clients = _synthetic_clients(K, n_per_client, d)
+    params = init_mlp(feats, jax.random.PRNGKey(1))
+    rows = {}
+    for p in (1, pods):
+        eng = make_engine("batched", clients, batch_size, epochs=1, pods=p)
+        t, payloads = time_round(eng, params, cfg, 0.05, K, batch_size)
+        emit(f"fed_round_pods{p}_K{K}", t * 1e6,
+             f"devices={p};upload_bytes={sum(pl.nbytes for pl in payloads)}")
+        rows[p] = t
+    emit(f"fed_pod_scaling_K{K}", rows[pods] * 1e6,
+         f"speedup_vs_1dev={rows[1] / rows[pods]:.2f}x")
+    return {"K": K, "round_s_by_pods": rows,
+            "speedup": rows[1] / rows[pods]}
 
 
 def main():
@@ -90,12 +195,38 @@ def main():
                     help="CI-sized shards/model (the default full run is "
                          "still laptop-scale)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="shard the bucketed cohort over N forced host "
+                         "devices (applied before jax import)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the results as JSON (CI writes "
+                         "BENCH_fed_engine.json)")
     args = ap.parse_args()
     quick = args.quick or not args.full
+
     rows = run(quick=quick)
+    compiles = run_compile_counts(quick=quick)
+    pod = run_pod_scaling(quick=quick, pods=_PODS)
+
     print("# K, seq_s/round, batched_s/round, speedup")
-    for K, ts, tb, sp in rows:
-        print(f"# {K:4d}  {ts:8.4f}  {tb:8.4f}  {sp:6.1f}x")
+    for r in rows:
+        print(f"# {r['K']:4d}  {r['seq_s']:8.4f}  {r['batched_s']:8.4f}  "
+              f"{r['speedup']:6.1f}x")
+    for policy, c in compiles.items():
+        print(f"# bucket={policy:5s}  {c['rounds']} rounds, "
+              f"{c['distinct_P']} distinct P -> {c['compiles']} compiles "
+              f"({c['total_s']:.2f}s)")
+    if pod:
+        print(f"# pods={_PODS}: {pod['round_s_by_pods'][1]:.4f}s -> "
+              f"{pod['round_s_by_pods'][_PODS]:.4f}s "
+              f"({pod['speedup']:.2f}x)")
+
+    if args.json_out:
+        blob = {"quick": quick, "k_scaling": rows, "compile_counts": compiles,
+                "pod_scaling": pod}
+        with open(args.json_out, "w") as f:
+            json.dump(blob, f, indent=1)
+        print(f"# wrote {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -233,6 +233,7 @@ class ScbfConfig:
     dp_noise_multiplier: float = 0.0  # 0 = off; sigma = nm * dp_clip_norm
     dp_clip_norm: float = 1.0        # L2 clip bound S on the masked delta
     dp_delta: float = 1e-5           # delta of the reported (eps, delta)
+    dp_accountant: str = "rdp"       # rdp (Gaussian RDP curve) | classic
 
 
 @dataclass(frozen=True)
@@ -246,6 +247,11 @@ class FedConfig:
     """
 
     engine: str = "batched"          # batched (vmapped cohort) | sequential
+    # --- bucketed participant padding (amortise recompiles under
+    #     varying per-round P — fed/cohort.bucket_size) ---
+    bucket: str = "pow2"             # pow2 (O(log K) compiles) | exact
+    # --- pod-axis cohort sharding (fed/engine.BatchedEngine) ---
+    pods: int = 1                    # devices on the "pod" mesh axis; 1 = off
     # --- per-round client sampling (sync mode) ---
     sample_fraction: float = 1.0     # fraction of clients invited per round
     dropout_rate: float = 0.0        # P(sampled client never reports back)

@@ -7,9 +7,15 @@ L2 bound S, add N(0, σ²S²) noise to the revealed entries only (masked
 entries stay exactly zero — the channel mask itself is the paper's
 primary privacy device; DP hardens what IS revealed).
 
-Accounting: per-loop (ε, δ) for the Gaussian mechanism via the classic
-bound σ = sqrt(2 ln(1.25/δ)) / ε, composed naively over loops (a tight
-RDP accountant is a drop-in upgrade; the naive bound is conservative).
+Accounting: Rényi differential privacy (RDP) by default.  The Gaussian
+mechanism with noise multiplier σ is (α, α/(2σ²))-RDP at every order
+α > 1 (Mironov 2017); RDP composes by *addition* over loops, and the
+total converts to (ε, δ)-DP via the improved bound of Balle et al.
+2020 / Canonne-Kamath-Steinke, minimised over a grid of orders.  The
+classic bound σ = sqrt(2 ln(1.25/δ)) / ε (Dwork & Roth Thm. A.1) is
+kept as a conservative fallback, but it is only a theorem for ε ≤ 1 —
+outside that domain it reports meaningless numbers, so the classic
+accountant refuses per-release ε > 1 instead of fabricating one.
 """
 from __future__ import annotations
 
@@ -61,16 +67,98 @@ def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# RDP order grid: dense near 1 (small-ε regime), sparse integer tail
+# for heavy composition.  Matches the grids used by the standard
+# moments-accountant implementations.
+RDP_ORDERS: Tuple[float, ...] = tuple(
+    [1.0 + x / 10.0 for x in range(1, 100)]
+    + list(range(11, 64)) + [128.0, 256.0, 512.0, 1024.0])
+
+
+def gaussian_rdp(noise_multiplier: float, order: float,
+                 steps: int = 1) -> float:
+    """RDP ε of ``steps`` Gaussian releases at one Rényi order α.
+
+    One release is (α, α/(2σ²))-RDP; composition adds."""
+    if order <= 1.0:
+        raise ValueError(f"RDP order must be > 1, got {order}")
+    return steps * order / (2.0 * noise_multiplier ** 2)
+
+
+def rdp_to_dp(rdp_curve, orders, delta: float) -> float:
+    """Convert an RDP curve to (ε, δ)-DP, minimised over orders.
+
+    Uses the improved conversion (Balle et al. 2020, Thm. 21 /
+    Canonne-Kamath-Steinke):
+        ε = ε_RDP(α) + log((α−1)/α) − (log δ + log α)/(α − 1).
+    """
+    best = math.inf
+    for eps_a, a in zip(rdp_curve, orders):
+        if a <= 1.0:
+            continue
+        eps = eps_a + math.log1p(-1.0 / a) \
+            - (math.log(delta) + math.log(a)) / (a - 1.0)
+        best = min(best, eps)
+    return max(best, 0.0)
+
+
 def epsilon_for(noise_multiplier: float, delta: float = 1e-5,
-                loops: int = 1) -> float:
-    """Conservative (ε, δ) accounting: per-loop Gaussian-mechanism ε,
-    composed linearly over loops."""
+                loops: int = 1, accountant: str = "rdp") -> float:
+    """Cumulative (ε, δ) ε of ``loops`` Gaussian releases.
+
+    ``rdp`` (default): compose on the Gaussian RDP curve, convert once.
+    ``classic``: σ = sqrt(2 ln(1.25/δ))/ε per release, composed
+    linearly — valid only while the per-release ε ≤ 1, and refused
+    (ValueError) outside that domain rather than reporting a number the
+    theorem does not back.
+    """
     if noise_multiplier <= 0:
         return math.inf
-    eps_loop = math.sqrt(2.0 * math.log(1.25 / delta)) / noise_multiplier
-    return eps_loop * loops
+    if loops <= 0:
+        return 0.0
+    if accountant == "rdp":
+        curve = [gaussian_rdp(noise_multiplier, a, loops)
+                 for a in RDP_ORDERS]
+        return rdp_to_dp(curve, RDP_ORDERS, delta)
+    if accountant == "classic":
+        eps_loop = math.sqrt(2.0 * math.log(1.25 / delta)) / noise_multiplier
+        if eps_loop > 1.0:
+            raise ValueError(
+                f"classic Gaussian bound needs per-release eps <= 1, got "
+                f"{eps_loop:.3f} (noise_multiplier={noise_multiplier}); "
+                "use accountant='rdp'")
+        return eps_loop * loops
+    raise ValueError(f"unknown accountant {accountant!r}; rdp|classic")
 
 
-def sigma_for(epsilon: float, delta: float = 1e-5) -> float:
-    """Noise multiplier achieving (ε, δ) per loop."""
-    return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+def sigma_for(epsilon: float, delta: float = 1e-5, loops: int = 1,
+              accountant: str = "rdp") -> float:
+    """Noise multiplier achieving cumulative (ε, δ) over ``loops``.
+
+    ``rdp`` inverts ``epsilon_for`` by bisection (ε is strictly
+    decreasing in σ); ``classic`` uses the closed form, within its
+    ε ≤ 1 validity domain only.
+    """
+    if epsilon <= 0:
+        raise ValueError(f"epsilon must be > 0, got {epsilon}")
+    if accountant == "classic":
+        eps_loop = epsilon / loops      # linear composition
+        if eps_loop > 1.0:
+            raise ValueError(
+                f"classic Gaussian bound is only valid for per-release "
+                f"eps <= 1, got {eps_loop:.3f}; use accountant='rdp'")
+        return math.sqrt(2.0 * math.log(1.25 / delta)) / eps_loop
+    if accountant != "rdp":
+        raise ValueError(f"unknown accountant {accountant!r}; rdp|classic")
+    lo, hi = 1e-6, 1.0
+    while epsilon_for(hi, delta, loops) > epsilon:
+        hi *= 2.0
+        if hi > 1e12:
+            raise ValueError("no noise multiplier reaches the target eps")
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if epsilon_for(mid, delta, loops) > epsilon:
+            lo = mid
+        else:
+            hi = mid
+    return hi

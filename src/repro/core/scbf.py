@@ -128,7 +128,11 @@ def run_federated(cohort: MedicalCohort,
     ``train_cfg.fed.engine`` ("batched" vmapped cohort | "sequential"
     reference loop); both consume the same PRNG stream, and for
     equal-size shards (the paper's IID split) they produce identical
-    trajectories.  Ragged cohorts (Dirichlet) batch differently —
+    trajectories.  The batched engine buckets the per-round participant
+    count (``fed.bucket``) so varying P under sampling/dropout does not
+    recompile, and shards the bucketed cohort over a pod mesh when
+    ``fed.pods > 1`` (docs/FED_ENGINE.md).  Rounds where every sampled
+    client drops out are skipped cleanly (no P=0 dispatch).  Ragged cohorts (Dirichlet) batch differently —
     the padded engine runs ``n_max // B`` masked batches per epoch
     while the sequential loop runs ``n_k // B`` — so there the engine
     choice selects between two legitimate trainings, not two
@@ -165,7 +169,8 @@ def run_federated(cohort: MedicalCohort,
 
     clients = _partition(cohort, train_cfg)
     eng = make_engine(engine or fed.engine, clients,
-                      train_cfg.local_batch_size, train_cfg.local_epochs)
+                      train_cfg.local_batch_size, train_cfg.local_epochs,
+                      bucket=fed.bucket, pods=fed.pods)
     scheduler = make_scheduler(fed, cfg.num_clients, train_cfg.seed)
     strategy = make_strategy(method, cfg, fed)
     state = strategy.init(params)
@@ -175,6 +180,11 @@ def run_federated(cohort: MedicalCohort,
     lr_fn = _lr_schedule(train_cfg)
 
     dp_on = method == "scbf" and cfg.dp_noise_multiplier > 0
+    if dp_on:
+        # fail fast on an unknown accountant or a classic-bound run
+        # outside its eps <= 1 domain, not after a full training loop
+        privacy.epsilon_for(cfg.dp_noise_multiplier, cfg.dp_delta,
+                            loops=1, accountant=cfg.dp_accountant)
     # ε composes per *release*, not per loop: under sampling, dropout or
     # fedbuff a client uploads in only some rounds, so the spend is
     # tracked per client and the worst (most-releasing) client reported
@@ -269,7 +279,8 @@ def run_federated(cohort: MedicalCohort,
             num_participants=P,
             epsilon=privacy.epsilon_for(cfg.dp_noise_multiplier,
                                         cfg.dp_delta,
-                                        loops=int(dp_releases.max()))
+                                        loops=int(dp_releases.max()),
+                                        accountant=cfg.dp_accountant)
             if dp_on else None)
         result.records.append(rec)
         if verbose:

@@ -1,7 +1,9 @@
-"""Cross-device federation engine: vmapped client cohorts, round
-scheduling, and pluggable aggregation (docs/FED_ENGINE.md)."""
-from repro.fed.cohort import PaddedCohort, pad_clients
+"""Cross-device federation engine: vmapped client cohorts with
+bucketed-P padding and pod-axis device sharding, round scheduling, and
+pluggable aggregation (docs/FED_ENGINE.md)."""
+from repro.fed.cohort import (PaddedCohort, bucket_size, pad_clients)
 from repro.fed.engine import (BatchedEngine, SequentialEngine, make_engine,
+                              reset_scbf_compile_count, scbf_compile_count,
                               stack_pytrees)
 from repro.fed.scheduler import (FedBuffScheduler, RoundPlan, SyncScheduler,
                                  make_scheduler)

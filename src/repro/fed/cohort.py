@@ -11,6 +11,14 @@ Padding overhead is bounded by the rag: for the paper's equal IID split
 ``n_max == n_k`` and the mask is all-ones, in which case the engine
 skips the weighted loss entirely and runs the exact sequential
 arithmetic (``uniform`` below).
+
+``bucket_size`` is the second padding axis: the *participant* count P
+varies round to round under sampling/dropout, and ``_scbf_pass`` is
+jitted on shapes, so executing at raw P would recompile on nearly every
+round.  Rounding P up to a small set of static bucket sizes keeps the
+number of compiled programs at O(log K) while wasting < 2x slots in the
+worst case on a single pod (see docs/FED_ENGINE.md §Bucketed
+participant padding for the multi-pod qualification).
 """
 from __future__ import annotations
 
@@ -47,6 +55,46 @@ class PaddedCohort:
         arithmetically identical to the sequential loop.
         """
         return bool(np.all(self.counts == self.n_max))
+
+
+BUCKET_POLICIES = ("pow2", "exact")
+
+
+def bucket_size(num_participants: int, num_clients: int,
+                policy: str = "pow2", multiple: int = 1) -> int:
+    """Static slot count for a round with ``num_participants`` reporters.
+
+    ``pow2``   next power of two, capped at the (rounded-up) client
+               count: at most ``floor(log2 K) + 2`` distinct compiled
+               programs (+1 of those only when K is not itself a power
+               of two — the capped top bucket), and with a single pod
+               the padded slots never exceed the real ones (< 2x
+               waste).
+    ``exact``  no bucketing — one compile per distinct P, the
+               pre-bucketing behaviour, kept as the reference.
+
+    The result is always a multiple of ``multiple`` (the pod-mesh device
+    count) so the slot axis shards evenly across devices; note this
+    rounding can exceed the 2x waste bound for cohorts smaller than the
+    device count (P=1 on 4 pods runs 4 slots).
+    """
+    if policy not in BUCKET_POLICIES:
+        raise ValueError(
+            f"unknown bucket policy {policy!r}; one of {BUCKET_POLICIES}")
+    if num_participants <= 0:
+        return 0
+    if num_participants > num_clients:
+        raise ValueError(f"{num_participants} participants > "
+                         f"{num_clients} clients")
+    mult = max(1, int(multiple))
+
+    def up(n: int) -> int:
+        return -(-n // mult) * mult
+
+    if policy == "exact":
+        return up(num_participants)
+    pow2 = 1 << (num_participants - 1).bit_length()
+    return min(up(pow2), up(num_clients))
 
 
 def pad_clients(clients: Sequence[Tuple[np.ndarray, np.ndarray]]

@@ -19,14 +19,31 @@ implementation: at full participation with equal shards the two produce
 the same trajectories (see tests/test_fed_engine.py), and the gap
 between them is what benchmarks/bench_fed_engine.py measures.
 
+Because ``_scbf_pass`` is jitted on shapes, a raw participant axis
+would retrace on nearly every round once sampling/dropout make P vary
+(cross-silo healthcare FL treats per-round client variability as the
+norm).  The engine therefore pads P up to a static *bucket* size
+(``repro.fed.cohort.bucket_size``) and threads a per-slot validity mask
+through train→delta→select→DP; padded slots compute garbage that the
+mask zeroes and ``_emit_payloads`` drops, so valid slots stay
+bit-identical to the unbucketed run while ``_scbf_pass`` compiles once
+per bucket instead of once per distinct P.
+
+With ``pods > 1`` the bucketed cohort additionally shards across
+devices: the slot axis is placed on a 1-D ``("pod",)`` mesh
+(launch/mesh.py, pod = federated client axis) and the vmap carries
+``spmd_axis_name="pod"`` so one round runs as a single SPMD program —
+exercised on CPU via XLA_FLAGS=--xla_force_host_platform_device_count.
+
 Both engines are pure round executors: the driver (repro.core.scbf)
 owns PRNG-key derivation, scheduling and aggregation, so an engine swap
 can never change the random stream.
 """
 from __future__ import annotations
 
+import contextlib
 from functools import partial
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +55,7 @@ from repro.core import privacy
 from repro.core import selection as sel
 from repro.core.client import (client_delta, local_train, local_train_impl,
                                masked_local_train_impl)
-from repro.fed.cohort import PaddedCohort, pad_clients
+from repro.fed.cohort import PaddedCohort, bucket_size, pad_clients
 
 
 def stack_pytrees(trees: Sequence):
@@ -61,21 +78,27 @@ def _reveal_masks(masked, masks):
 @partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss",
                                    "stacked_params", "upload_rate",
                                    "selection_mode", "score_norm",
-                                   "dp_noise", "dp_clip"))
-def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, *,
+                                   "dp_noise", "dp_clip", "spmd_axis"))
+def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid, *,
                batch_size: int, epochs: int, masked_loss: bool,
                stacked_params: bool, upload_rate: float,
                selection_mode: str, score_norm: bool,
-               dp_noise: float, dp_clip: float):
-    """Train + delta + channel-select (+ DP) for P clients in one vmap.
+               dp_noise: float, dp_clip: float,
+               spmd_axis: Optional[str] = None):
+    """Train + delta + channel-select (+ DP) for B slots in one vmap.
 
-    ``params`` is either one shared pytree (sync rounds) or a P-stacked
+    ``params`` is either one shared pytree (sync rounds) or a B-stacked
     pytree (fedbuff: each participant trains from its own stale
-    version).  Returns (masked_deltas, masks), both P-stacked.
+    version).  ``valid`` is the (B,) bool slot mask: the first P slots
+    carry real participants, the rest are bucket padding whose outputs
+    are zeroed here (``jnp.where(True, x, 0)`` is ``x`` bitwise, so
+    real slots are untouched).  ``spmd_axis`` names the mesh axis the
+    slot dimension is sharded over (None = single device).  Returns
+    (masked_deltas, masks), both B-stacked.
     """
     p_ax = 0 if stacked_params else None
 
-    def one(p, x, y, w, ck, sk, dk):
+    def one(p, x, y, w, ck, sk, dk, v):
         if masked_loss:
             new_p = masked_local_train_impl(p, x, y, w, lr, ck,
                                             batch_size=batch_size,
@@ -90,16 +113,27 @@ def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, *,
             masked = privacy.gaussian_mechanism(
                 tuple(masked), dk, dp_noise, dp_clip,
                 masks=_reveal_masks(masked, masks))
-        return tuple(masked), tuple(masks)
+        masked = tuple({k: jnp.where(v, t, jnp.zeros_like(t))
+                        for k, t in layer.items()} for layer in masked)
+        masks = tuple({k: (None if m is None else jnp.logical_and(m, v))
+                       for k, m in layer.items()} for layer in masks)
+        return masked, masks
 
-    return jax.vmap(one, in_axes=(p_ax, 0, 0, 0, 0, 0, 0))(
-        params, xs, ys, ws, ckeys, skeys, dp_keys)
+    return jax.vmap(one, in_axes=(p_ax, 0, 0, 0, 0, 0, 0, 0),
+                    spmd_axis_name=spmd_axis)(
+        params, xs, ys, ws, ckeys, skeys, dp_keys, valid)
 
 
-@partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss"))
+@partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss",
+                                   "spmd_axis"))
 def _fedavg_pass(params, xs, ys, ws, lr, ckeys, *,
-                 batch_size: int, epochs: int, masked_loss: bool):
-    """Full-weight local training for P clients in one vmap."""
+                 batch_size: int, epochs: int, masked_loss: bool,
+                 spmd_axis: Optional[str] = None):
+    """Full-weight local training for B slots in one vmap.
+
+    Padded slots need no validity gating here: their trained params are
+    per-slot outputs that ``fedavg_round`` simply never reads.
+    """
     def one(p, x, y, w, ck):
         if masked_loss:
             return masked_local_train_impl(p, x, y, w, lr, ck,
@@ -108,13 +142,18 @@ def _fedavg_pass(params, xs, ys, ws, lr, ckeys, *,
         return local_train_impl(p, x, y, lr, ck,
                                 batch_size=batch_size, epochs=epochs)
 
-    return jax.vmap(one, in_axes=(None, 0, 0, 0, 0))(params, xs, ys, ws,
-                                                      ckeys)
+    return jax.vmap(one, in_axes=(None, 0, 0, 0, 0),
+                    spmd_axis_name=spmd_axis)(params, xs, ys, ws, ckeys)
 
 
 def _emit_payloads(masked_stacked, masks_stacked, num: int
                    ) -> Tuple[List[wire.Payload], List[sel.UploadStats]]:
-    """One device→host transfer, then per-client wire encoding."""
+    """One device→host transfer, then per-client wire encoding.
+
+    ``num`` is the real participant count P: slots P..B-1 of a bucketed
+    pass are padding (already zeroed by the validity mask) and are never
+    encoded — padded slots ship zero bytes.
+    """
     masked_host = jax.device_get(masked_stacked)
     masks_host = jax.device_get(masks_stacked)
     payloads, stats = [], []
@@ -128,21 +167,62 @@ def _emit_payloads(masked_stacked, masks_stacked, num: int
     return payloads, stats
 
 
+def _pad_slots(arr, num_slots: int):
+    """Pad axis 0 up to ``num_slots`` by repeating slot 0.
+
+    Slot-0 content (not zeros) keeps padded slots numerically
+    well-behaved — they train on a real shard, and everything they
+    produce is zeroed by the validity mask and dropped before encoding.
+    """
+    p = arr.shape[0]
+    if num_slots == p:
+        return arr
+    reps = jnp.broadcast_to(arr[:1], (num_slots - p,) + arr.shape[1:])
+    return jnp.concatenate([jnp.asarray(arr), reps], axis=0)
+
+
 class BatchedEngine:
-    """Vmapped padded-cohort execution: one XLA program per round."""
+    """Vmapped bucketed-cohort execution: one XLA program per round.
+
+    ``bucket`` picks the participant-padding policy
+    (repro.fed.cohort.bucket_size); ``pods > 1`` shards the bucketed
+    slot axis over a 1-D pod mesh so the round runs SPMD across
+    devices.
+    """
 
     name = "batched"
 
     def __init__(self, clients: Sequence[Tuple[np.ndarray, np.ndarray]],
-                 batch_size: int, epochs: int):
+                 batch_size: int, epochs: int, bucket: str = "pow2",
+                 pods: int = 1):
+        # validate the policy at construction, not on round 1
+        bucket_size(1, 1, bucket)
         self.cohort: PaddedCohort = pad_clients(clients)
         self.counts = self.cohort.counts
         self.batch_size = batch_size
         self.epochs = epochs
+        self.bucket = bucket
+        self.pods = max(1, int(pods))
+        if self.pods > 1:
+            from repro.launch.mesh import make_pod_mesh
+            from repro.sharding.rules import cohort_shardings
+            self.mesh = make_pod_mesh(self.pods)
+            self._slot_sharding, self._repl_sharding = \
+                cohort_shardings(self.mesh)
+        else:
+            self.mesh = None
 
     @property
     def num_clients(self) -> int:
         return self.cohort.num_clients
+
+    @property
+    def spmd_axis(self) -> Optional[str]:
+        return "pod" if self.mesh is not None else None
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else \
+            contextlib.nullcontext()
 
     def _gather(self, participants: np.ndarray):
         part = np.asarray(participants)
@@ -151,50 +231,103 @@ class BatchedEngine:
             return self.cohort.x, self.cohort.y, self.cohort.w
         return self.cohort.x[part], self.cohort.y[part], self.cohort.w[part]
 
+    def _bucketed_inputs(self, participants, slot_arrays, params=None):
+        """Pad per-slot arrays up to the bucket; returns (B, arrays,
+        params, valid).  With a pod mesh, per-slot arrays are placed
+        with the slot axis sharded over ``pod`` and params replicated.
+        """
+        p_count = len(participants)
+        b = bucket_size(p_count, self.num_clients, self.bucket, self.pods)
+        valid = jnp.arange(b) < p_count
+        out = [_pad_slots(jnp.asarray(a), b) for a in slot_arrays]
+        if params is not None:
+            params = jax.tree_util.tree_map(lambda l: _pad_slots(l, b),
+                                            params)
+        if self.mesh is not None:
+            out = [jax.device_put(a, self._slot_sharding) for a in out]
+            valid = jax.device_put(valid, self._slot_sharding)
+            if params is not None:
+                params = jax.device_put(params, self._slot_sharding)
+        return b, out, params, valid
+
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
                    cfg: ScbfConfig):
         """Masked sparse uploads for every participant, one batched pass.
 
         ``params``: one pytree (sync) or a list of per-participant
-        pytrees (fedbuff stale versions).
+        pytrees (fedbuff stale versions).  An empty round returns
+        ``([], [])`` without dispatching a P=0 program.
         """
+        p_count = len(participants)
+        if not p_count:
+            return [], []
         xs, ys, ws = self._gather(participants)
         stacked = isinstance(params, list)
         p = stack_pytrees(params) if stacked else tuple(params)
-        masked, masks = _scbf_pass(
-            p, xs, ys, ws, lr, jnp.stack(list(ckeys)),
-            jnp.stack(list(skeys)), jnp.stack(list(dp_keys)),
-            batch_size=self.batch_size, epochs=self.epochs,
-            masked_loss=not self.cohort.uniform, stacked_params=stacked,
-            upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
-            score_norm=cfg.score_norm, dp_noise=cfg.dp_noise_multiplier,
-            dp_clip=cfg.dp_clip_norm)
-        return _emit_payloads(masked, masks, len(participants))
+        _, (xs, ys, ws, ck, sk, dk), p_stk, valid = self._bucketed_inputs(
+            participants,
+            (xs, ys, ws, jnp.stack(list(ckeys)), jnp.stack(list(skeys)),
+             jnp.stack(list(dp_keys))),
+            params=p if stacked else None)
+        if stacked:
+            p = p_stk
+        elif self.mesh is not None:
+            p = jax.device_put(p, self._repl_sharding)
+        with self._mesh_ctx():
+            masked, masks = _scbf_pass(
+                p, xs, ys, ws, lr, ck, sk, dk, valid,
+                batch_size=self.batch_size, epochs=self.epochs,
+                masked_loss=not self.cohort.uniform, stacked_params=stacked,
+                upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
+                score_norm=cfg.score_norm, dp_noise=cfg.dp_noise_multiplier,
+                dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis)
+        return _emit_payloads(masked, masks, p_count)
 
     def fedavg_round(self, params, participants, lr, ckeys):
         """Full-weight training; returns (per-client params list, counts).
 
         Training runs stacked in one vmap; the returned list holds
         per-client views into that output so the aggregation strategy
-        can reduce incrementally (core.server.fedavg_update).
+        can reduce incrementally (core.server.fedavg_update).  Padded
+        bucket slots are simply never read.
         """
+        p_count = len(participants)
+        if not p_count:
+            return [], self.counts[:0]
         xs, ys, ws = self._gather(participants)
-        new_p = _fedavg_pass(tuple(params), xs, ys, ws, lr,
-                             jnp.stack(list(ckeys)),
-                             batch_size=self.batch_size, epochs=self.epochs,
-                             masked_loss=not self.cohort.uniform)
+        p = tuple(params)
+        _, (xs, ys, ws, ck), _, _ = self._bucketed_inputs(
+            participants, (xs, ys, ws, jnp.stack(list(ckeys))))
+        if self.mesh is not None:
+            p = jax.device_put(p, self._repl_sharding)
+        with self._mesh_ctx():
+            new_p = _fedavg_pass(p, xs, ys, ws, lr, ck,
+                                 batch_size=self.batch_size,
+                                 epochs=self.epochs,
+                                 masked_loss=not self.cohort.uniform,
+                                 spmd_axis=self.spmd_axis)
         out = [jax.tree_util.tree_map(lambda l, i=i: l[i], new_p)
-               for i in range(len(participants))]
+               for i in range(p_count)]
         return out, self.counts[np.asarray(participants)]
 
 
 class SequentialEngine:
-    """The seed's per-client Python loop, kept as the reference path."""
+    """The seed's per-client Python loop, kept as the reference path.
+
+    Bucketing is a batched-engine concept (there is no shared program
+    to retrace here), so ``bucket`` is accepted-and-ignored for
+    signature parity; ``pods > 1`` is refused — the loop is inherently
+    single-device.
+    """
 
     name = "sequential"
 
     def __init__(self, clients: Sequence[Tuple[np.ndarray, np.ndarray]],
-                 batch_size: int, epochs: int):
+                 batch_size: int, epochs: int, bucket: str = "pow2",
+                 pods: int = 1):
+        if pods > 1:
+            raise ValueError("the sequential engine is single-device; "
+                             "pod sharding needs engine='batched'")
         self.clients = [(jnp.asarray(x), jnp.asarray(y)) for x, y in clients]
         self.counts = np.array([x.shape[0] for x, _ in clients],
                                dtype=np.int64)
@@ -240,7 +373,41 @@ class SequentialEngine:
 ENGINES = {"batched": BatchedEngine, "sequential": SequentialEngine}
 
 
-def make_engine(kind: str, clients, batch_size: int, epochs: int):
+def scbf_compile_count() -> int:
+    """Compiled-variant count of the batched SCBF pass (jit cache size).
+
+    One entry per traced (shape, static-args) combination — the number
+    tests and benchmarks assert stays at "one per bucket", not "one per
+    distinct P" (clear with ``reset_scbf_compile_count`` first).
+
+    Reads jit's cache through the ``_cache_size`` introspection hook,
+    which is not public API: if a jax upgrade removes it, fail with an
+    actionable error instead of an AttributeError deep in a test (CI
+    pins jax==0.4.37; there is no public per-function alternative —
+    ``jax.monitoring`` compile events are process-global).
+    """
+    try:
+        return int(_scbf_pass._cache_size())
+    except AttributeError as e:
+        raise RuntimeError(
+            "jit cache introspection (_cache_size) is unavailable on this "
+            "jax version; compile-count assertions need the pinned "
+            "jax==0.4.37 API or an equivalent hook") from e
+
+
+def reset_scbf_compile_count() -> None:
+    try:
+        _scbf_pass._clear_cache()
+    except AttributeError as e:
+        raise RuntimeError(
+            "jit cache clearing (_clear_cache) is unavailable on this "
+            "jax version; compile-count assertions need the pinned "
+            "jax==0.4.37 API or an equivalent hook") from e
+
+
+def make_engine(kind: str, clients, batch_size: int, epochs: int,
+                bucket: str = "pow2", pods: int = 1):
     if kind not in ENGINES:
         raise ValueError(f"unknown engine {kind!r}; one of {sorted(ENGINES)}")
-    return ENGINES[kind](clients, batch_size, epochs)
+    return ENGINES[kind](clients, batch_size, epochs, bucket=bucket,
+                         pods=pods)

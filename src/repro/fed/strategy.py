@@ -145,6 +145,14 @@ class FedBuff:
 def make_strategy(method: str, scbf_cfg: ScbfConfig, fed_cfg: FedConfig):
     """Strategy for (method, mode): fedbuff wraps the sparse scbf path."""
     if fed_cfg.mode == "fedbuff":
+        if method != "scbf":
+            # FedBuff.aggregate reads only contrib.payloads; fedavg
+            # rounds produce client_params, so the server would
+            # silently never update
+            raise ValueError(
+                f"fedbuff buffers sparse scbf payloads; method={method!r} "
+                "produces full client weights the FedBuff strategy would "
+                "silently ignore")
         return FedBuff(buffer_size=fed_cfg.buffer_size,
                        staleness_exponent=fed_cfg.staleness_exponent,
                        server_lr=fed_cfg.server_lr)

@@ -34,3 +34,22 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Single-device mesh for CPU smoke tests of the sharded code path."""
     n = int(np.prod(shape))
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_pod_mesh(num_pods: int):
+    """1-D ``("pod",)`` mesh for federated cohort sharding.
+
+    The pod axis is the federated client axis (DESIGN.md §5): the
+    batched engine shards its bucketed ``(B, n_max, d)`` cohort over it,
+    one group of participant slots per device, with weights replicated.
+    On CPU, multiple pods come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before
+    the first jax import (same contract as the dry-run).
+    """
+    devices = jax.devices()
+    if len(devices) < num_pods:
+        raise RuntimeError(
+            f"need {num_pods} devices for a pod mesh, have {len(devices)} — "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{num_pods} before importing jax")
+    return jax.make_mesh((num_pods,), ("pod",), devices=devices[:num_pods])

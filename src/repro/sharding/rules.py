@@ -86,6 +86,24 @@ def param_shardings(axes_tree, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# Federated cohorts
+# ---------------------------------------------------------------------------
+
+def cohort_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:
+    """(slot_sharding, replicated) for a bucketed participant cohort.
+
+    The pod axis is the federated client axis: per-participant arrays
+    (``(B, n_max, d)`` shards, per-slot PRNG keys, the validity mask)
+    split their leading slot axis over ``pod``; the global model is
+    replicated — weights NEVER shard over pod (the contract above), the
+    channel-masked gradient exchange is the only cross-pod traffic.
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'pod' axis")
+    return (NamedSharding(mesh, P("pod")), NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
 # Activations
 # ---------------------------------------------------------------------------
 
