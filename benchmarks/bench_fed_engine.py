@@ -17,9 +17,15 @@ BENCH_fed_engine.json so the perf trajectory accumulates):
    pod mesh vs. single-device.  ``--pods`` forces the host device
    count, so it must be given on the command line (the flag is applied
    before jax is imported).
+4. **Fused round loop** (``--fuse``) — the per-round batched path
+   (engine round + host aggregate per round) vs whole ``lax.scan``
+   chunks with on-device aggregation at K=500 full participation, plus
+   a 30-round varying-P trace asserting the fused path stays <= 2
+   compiles (the run-constant (S, B) plan).
 
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --pods 4
+    PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --fuse
     PYTHONPATH=src python -m benchmarks.bench_fed_engine          # larger shards
 """
 from __future__ import annotations
@@ -47,9 +53,11 @@ import numpy as np
 from benchmarks.common import emit
 from repro.config import FedConfig, ScbfConfig
 from repro.fed.cohort import bucket_size
-from repro.fed.engine import (make_engine, reset_scbf_compile_count,
-                              scbf_compile_count)
+from repro.fed.engine import (fused_compile_count, make_engine,
+                              reset_fused_compile_count,
+                              reset_scbf_compile_count, scbf_compile_count)
 from repro.fed.scheduler import SyncScheduler
+from repro.fed.strategy import RoundContribution, ScbfSum
 from repro.models.mlp_net import init_mlp
 
 
@@ -164,6 +172,151 @@ def run_compile_counts(quick: bool = True, rounds: int = 30,
     return out
 
 
+def _round_key_rows(key, participants_sizes):
+    """Per-round (ckeys, skeys, dp_keys) rows off one key stream — the
+    same derivation order for the per-round and fused drivers, so the
+    two paths are comparable AND must ship identical bytes."""
+    rows = []
+    for p in participants_sizes:
+        key, kc, ks, kd = jax.random.split(key, 4)
+        if p:
+            rows.append(tuple(np.asarray(jax.random.split(k, p))
+                              for k in (kc, ks, kd)))
+        else:
+            empty = np.zeros((0, 2), np.uint32)
+            rows.append((empty, empty, empty))
+    return key, rows
+
+
+def run_fused_section(quick: bool = True, rounds: int = 12,
+                      fuse: int = 6, trace_rounds: int = 30):
+    """Section 4 (``--fuse``): the device-resident fused round loop.
+
+    a) K=500 full participation: ``rounds`` whole SCBF rounds through
+       the per-round batched path (engine round + host ScbfSum
+       aggregate) vs the fused path (plan → one lax.scan chunk per
+       ``fuse`` rounds → boundary wire emit), same key stream, identical
+       upload bytes asserted.  The acceptance bar is >= 2x
+       round-throughput.
+    b) a 30-round varying-P trace (sample_fraction=0.5, dropout=0.2):
+       the fused (S, B) plan is padded to a run-constant shape, so the
+       whole trace must cost <= 2 fused compiles.
+    """
+    K = 500
+    n_per_client = 64 if quick else 512
+    d = 128 if quick else 512
+    feats = (d, 32, 8, 1) if quick else (d, 128, 32, 1)
+    batch_size = 32 if quick else 128
+    cfg = ScbfConfig(upload_rate=0.10, num_clients=K)
+    clients = _synthetic_clients(K, n_per_client, d)
+    params = init_mlp(feats, jax.random.PRNGKey(1))
+    eng = make_engine("batched", clients, batch_size, epochs=1)
+    part = np.arange(K)
+    lr = 0.05
+    strategy = ScbfSum()
+    counts = eng.counts[part]
+
+    # ---- per-round batched path: K-round loop, host aggregate ----
+    _, warm = _round_key_rows(jax.random.PRNGKey(9), [K])
+    state = strategy.init(tuple(params))
+    payloads, _ = eng.scbf_round(state.params, part, lr, *warm[0], cfg)
+    state = strategy.aggregate(state, RoundContribution(
+        num_examples=counts, staleness=np.zeros(K), payloads=payloads))
+    _, rows = _round_key_rows(jax.random.PRNGKey(0), [K] * rounds)
+    state = strategy.init(tuple(params))
+    per_round_bytes = 0
+    t0 = time.perf_counter()
+    for ck, sk, dk in rows:
+        payloads, _ = eng.scbf_round(state.params, part, lr, ck, sk, dk,
+                                     cfg)
+        per_round_bytes += sum(p.nbytes for p in payloads)
+        state = strategy.aggregate(state, RoundContribution(
+            num_examples=counts, staleness=np.zeros(K), payloads=payloads))
+    per_round_s = (time.perf_counter() - t0) / rounds
+
+    # ---- fused path: same trace, chunks of `fuse` rounds ----
+    B = eng.fused_num_slots(K)
+
+    def fused_run(rows, params0):
+        # fresh device copies: the chunk call donates its params buffers
+        # on backends that support donation, and params0 is reused by
+        # the caller (warmup run, then the timed run)
+        state_p = jax.tree_util.tree_map(lambda a: a + 0, tuple(params0))
+        total = 0
+        for c0 in range(0, len(rows), fuse):
+            chunk = rows[c0:c0 + fuse]
+            plan = eng.prepare_fused_plan(
+                [part] * len(chunk), [lr] * len(chunk),
+                [r[0] for r in chunk], [r[1] for r in chunk],
+                [r[2] for r in chunk], horizon=fuse, num_slots=B)
+            state_p, masked, masks = eng.fused_scbf_chunk(state_p, plan,
+                                                          cfg)
+            for pls, _ in eng.emit_fused_payloads(masked, masks, plan):
+                total += sum(p.nbytes for p in pls)
+        return state_p, total
+
+    _, warm_rows = _round_key_rows(jax.random.PRNGKey(9), [K] * fuse)
+    fused_run(warm_rows, params)                    # compile warmup
+    _, rows = _round_key_rows(jax.random.PRNGKey(0), [K] * rounds)
+    t0 = time.perf_counter()
+    _, fused_bytes = fused_run(rows, params)
+    fused_s = (time.perf_counter() - t0) / rounds
+    assert fused_bytes == per_round_bytes, \
+        "fused path must ship identical bytes"
+    speedup = per_round_s / fused_s
+    emit(f"fed_round_fused_K{K}", fused_s * 1e6,
+         f"fuse_rounds={fuse};speedup_vs_per_round={speedup:.1f}x;"
+         f"upload_bytes={fused_bytes}")
+
+    # ---- compile-count trace: varying P, one run-constant (S, B) ----
+    Kt = 32
+    t_clients = _synthetic_clients(Kt, 32 if quick else 256,
+                                   64 if quick else 256)
+    t_feats = (64, 16, 4, 1) if quick else (256, 64, 16, 1)
+    t_params = init_mlp(t_feats, jax.random.PRNGKey(1))
+    t_cfg = ScbfConfig(upload_rate=0.10, num_clients=Kt)
+    fed = FedConfig(sample_fraction=0.5, dropout_rate=0.2)
+    sched = SyncScheduler(Kt, fed, seed=0)
+    t_eng = make_engine("batched", t_clients, 16 if quick else 64,
+                        epochs=1)
+    Bt = t_eng.fused_num_slots(sched.max_participants)
+    S = 8
+    reset_fused_compile_count()
+    key = jax.random.PRNGKey(0)
+    seen_p = set()
+    t0 = time.perf_counter()
+    state_p = tuple(t_params)
+    r0 = 0
+    while r0 < trace_rounds:
+        plans = sched.plan_horizon(r0, min(S, trace_rounds - r0))
+        parts = [p.participants for p in plans]
+        seen_p.update(p.num_participants for p in plans
+                      if p.num_participants)
+        key, rows = _round_key_rows(key, [p.size for p in parts])
+        plan = t_eng.prepare_fused_plan(
+            parts, [0.05] * len(parts), [r[0] for r in rows],
+            [r[1] for r in rows], [r[2] for r in rows],
+            horizon=S, num_slots=Bt)
+        state_p, masked, masks = t_eng.fused_scbf_chunk(state_p, plan,
+                                                        t_cfg)
+        t_eng.emit_fused_payloads(masked, masks, plan)
+        r0 += len(plans)
+    trace_wall = time.perf_counter() - t0
+    compiles = fused_compile_count()
+    assert compiles <= 2, \
+        f"fused varying-P trace must stay <= 2 compiles, got {compiles}"
+    emit(f"fed_fused_compiles_K{Kt}", trace_wall / trace_rounds * 1e6,
+         f"rounds={trace_rounds};distinct_P={len(seen_p)};"
+         f"compiles={compiles}")
+    return {"K": K, "rounds": rounds, "fuse_rounds": fuse,
+            "per_round_s": per_round_s, "fused_s": fused_s,
+            "speedup": speedup, "upload_bytes": fused_bytes,
+            "compile_trace": {"rounds": trace_rounds,
+                              "distinct_P": len(seen_p),
+                              "compiles": compiles,
+                              "total_s": trace_wall}}
+
+
 def run_pod_scaling(quick: bool = True, pods: int = 1):
     """Section 3: bucketed round sharded over a pod mesh vs one device."""
     if pods <= 1:
@@ -198,6 +351,10 @@ def main():
     ap.add_argument("--pods", type=int, default=1,
                     help="shard the bucketed cohort over N forced host "
                          "devices (applied before jax import)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="also run the fused-round-loop section "
+                         "(per-round vs lax.scan chunks at K=500, plus "
+                         "the varying-P compile trace)")
     ap.add_argument("--json-out", default=None,
                     help="also write the results as JSON (CI writes "
                          "BENCH_fed_engine.json)")
@@ -206,6 +363,7 @@ def main():
 
     rows = run(quick=quick)
     compiles = run_compile_counts(quick=quick)
+    fused = run_fused_section(quick=quick) if args.fuse else None
     pod = run_pod_scaling(quick=quick, pods=_PODS)
 
     print("# K, seq_s/round, batched_s/round, speedup")
@@ -216,6 +374,12 @@ def main():
         print(f"# bucket={policy:5s}  {c['rounds']} rounds, "
               f"{c['distinct_P']} distinct P -> {c['compiles']} compiles "
               f"({c['total_s']:.2f}s)")
+    if fused:
+        print(f"# fused K={fused['K']} S={fused['fuse_rounds']}: "
+              f"{fused['per_round_s']:.4f}s -> {fused['fused_s']:.4f}s "
+              f"per round ({fused['speedup']:.1f}x); varying-P trace "
+              f"{fused['compile_trace']['rounds']} rounds -> "
+              f"{fused['compile_trace']['compiles']} compiles")
     if pod:
         print(f"# pods={_PODS}: {pod['round_s_by_pods'][1]:.4f}s -> "
               f"{pod['round_s_by_pods'][_PODS]:.4f}s "
@@ -223,7 +387,7 @@ def main():
 
     if args.json_out:
         blob = {"quick": quick, "k_scaling": rows, "compile_counts": compiles,
-                "pod_scaling": pod}
+                "fused": fused, "pod_scaling": pod}
         with open(args.json_out, "w") as f:
             json.dump(blob, f, indent=1)
         print(f"# wrote {args.json_out}")

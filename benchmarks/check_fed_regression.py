@@ -1,0 +1,106 @@
+"""Fail CI when the fed-engine bench regresses against the committed
+baseline (benchmarks/baselines/fed_engine.json).
+
+Only metrics stable enough to gate on are guarded, so a slower CI
+runner cannot fail the gate spuriously:
+
+  * **fused round-throughput ratio** — fused-vs-per-round speedup: a
+    ratio of two device-bound timings from the SAME process, so
+    absolute runner speed cancels; a drop below 75% of the baseline
+    ratio (>25% regression) fails.  The batched-vs-sequential k_scaling
+    speedups are NOT ratio-guarded: the sequential side is
+    dispatch-bound and its per-round time swings by >25% between runs
+    of identical code (the repo's own measurements of the K=500 row
+    range 8-13x), so gating it would flake — the rows must still be
+    *present*, they are just informational.
+  * **compile counts** — fully deterministic; ANY growth fails (a
+    retracing regression is exactly the bug class PR 3/4 fixed).
+
+Refresh the baseline after an intentional perf change with EXACTLY the
+command CI runs (ci.yml bench-smoke), then commit the result with a
+note on what changed:
+
+    PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --fuse \
+        --pods 2 --json-out benchmarks/baselines/fed_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+RATIO_TOLERANCE = 0.75      # fresh fused ratio must be >= 75% of baseline
+
+
+def compare(fresh: dict, baseline: dict) -> List[str]:
+    """Regression messages (empty = pass).
+
+    Every section the baseline guards must also exist in the fresh
+    results — a bench refactor that silently drops a section must fail
+    the gate, not vacuously pass it.
+    """
+    failures = []
+
+    # k_scaling rows are informational (their seq-vs-batched ratio is
+    # too jittery to gate — see module docstring) but must stay present
+    fresh_k = {r["K"] for r in fresh.get("k_scaling", [])}
+    for row in baseline.get("k_scaling", []):
+        if row["K"] not in fresh_k:
+            failures.append(f"k_scaling K={row['K']} row missing from "
+                            "fresh results (baseline records it)")
+
+    for policy, base in baseline.get("compile_counts", {}).items():
+        c = fresh.get("compile_counts", {}).get(policy)
+        if c is None:
+            failures.append(f"compile_counts[{policy}] missing from "
+                            "fresh results (baseline guards it)")
+        elif c["compiles"] > base["compiles"]:
+            failures.append(
+                f"compile_counts[{policy}]: {c['compiles']} compiles > "
+                f"baseline {base['compiles']} (retracing regression)")
+
+    f, b = fresh.get("fused"), baseline.get("fused")
+    if f and b:
+        floor = b["speedup"] * RATIO_TOLERANCE
+        if f["speedup"] < floor:
+            failures.append(
+                f"fused: speedup {f['speedup']:.2f}x < {floor:.2f}x "
+                f"(75% of baseline {b['speedup']:.2f}x)")
+        fc = f["compile_trace"]["compiles"]
+        bc = b["compile_trace"]["compiles"]
+        if fc > bc:
+            failures.append(f"fused compile trace: {fc} compiles > "
+                            f"baseline {bc}")
+    elif b and not f:
+        failures.append("fused section missing from fresh results "
+                        "(baseline has one — run the bench with --fuse)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly-written BENCH_fed_engine.json")
+    ap.add_argument("baseline",
+                    help="committed benchmarks/baselines/fed_engine.json")
+    args = ap.parse_args()
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = compare(fresh, baseline)
+    if failures:
+        print("fed-engine bench regression vs committed baseline:")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        print("(refresh instructions: see benchmarks/check_fed_regression"
+              ".py docstring — only do so for an intentional change)")
+        return 1
+    print("fed-engine bench within baseline "
+          f"(ratio tolerance {RATIO_TOLERANCE:.0%}, compile counts "
+          "monotone)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -166,17 +166,27 @@ def tree_dense_bytes(tree) -> int:
 def apply_payloads(params, payloads: Sequence[Payload]):
     """W <- W + Σ_k decode(payload_k), without materialising K dense deltas.
 
-    All clients' (index, value) buffers for a leaf are concatenated into
-    one stacked buffer and scatter-added in a single segment pass
-    (``.at[idx].add`` sums duplicate indices); dense-codec layers fold
-    into a single accumulator.  Peak extra memory is one dense leaf plus
-    the compact buffers — never K dense pytrees.
+    Per leaf, the client deltas accumulate **delta-first in client
+    order** into one zero-initialised f32 buffer, which is then added to
+    the parameters once: runs of consecutive coo/bitmap clients
+    concatenate their (index, value) buffers into a single scatter-add
+    (``.at[idx].add``), and each dense-codec client folds in as one
+    vector add at its position in the order — so the per-coordinate
+    accumulation order is the client order regardless of which codec
+    each client's encoder picked.  Codec choice is data-dependent and
+    must never change the arithmetic: this exact order is what the
+    fused path's on-device slot-ordered reduction
+    (``repro.fed.strategy.scbf_sum_step``) mirrors, making the two
+    bit-identical.  (That parity additionally assumes the backend's
+    scatter applies duplicate indices in update order — true of the
+    backends we run, and pinned by the parity tests rather than by the
+    XLA spec.)  Peak extra memory is one dense leaf plus the compact
+    buffers — never K dense pytrees.
     """
     leaves, treedef = jax.tree_util.tree_flatten(params)
     n = len(leaves)
-    idx_parts: List[List[np.ndarray]] = [[] for _ in range(n)]
-    val_parts: List[List[np.ndarray]] = [[] for _ in range(n)]
-    dense_acc: List[Optional[np.ndarray]] = [None] * n
+    # per leaf: ordered ops, each ("scatter", idx, val) | ("dense", val)
+    ops: List[List[Tuple]] = [[] for _ in range(n)]
     for p in payloads:
         if len(p.layers) != n:
             raise ValueError("payload structure does not match params")
@@ -186,19 +196,34 @@ def apply_payloads(params, payloads: Sequence[Payload]):
                     f"leaf {i}: payload shape {lp.shape} != "
                     f"param shape {leaves[i].shape}")
             if lp.codec == "dense":
-                d = lp.values.astype(np.float32)
-                dense_acc[i] = d if dense_acc[i] is None else dense_acc[i] + d
+                ops[i].append(("dense", lp.values.astype(np.float32)))
             else:
-                idx_parts[i].append(lp.flat_indices())
-                val_parts[i].append(lp.values.astype(np.float32))
+                ops[i].append(("scatter", lp.flat_indices(),
+                               lp.values.astype(np.float32)))
     out = []
     for i, leaf in enumerate(leaves):
         flat = leaf.reshape(-1).astype(jnp.float32)
-        if idx_parts[i]:
-            cat_idx = jnp.asarray(np.concatenate(idx_parts[i]))
-            cat_val = jnp.asarray(np.concatenate(val_parts[i]))
-            flat = flat.at[cat_idx].add(cat_val)
-        if dense_acc[i] is not None:
-            flat = flat + jnp.asarray(dense_acc[i])
+        if ops[i]:
+            acc = jnp.zeros(flat.shape, jnp.float32)
+            pend_idx: List[np.ndarray] = []
+            pend_val: List[np.ndarray] = []
+
+            def flush(acc):
+                if pend_idx:
+                    cat_idx = jnp.asarray(np.concatenate(pend_idx))
+                    cat_val = jnp.asarray(np.concatenate(pend_val))
+                    acc = acc.at[cat_idx].add(cat_val)
+                    pend_idx.clear()
+                    pend_val.clear()
+                return acc
+
+            for op in ops[i]:
+                if op[0] == "scatter":
+                    pend_idx.append(op[1])
+                    pend_val.append(op[2])
+                else:
+                    acc = flush(acc) + jnp.asarray(op[1])
+            acc = flush(acc)
+            flat = flat + acc
         out.append(flat.reshape(leaf.shape).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)

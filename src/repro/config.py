@@ -234,6 +234,12 @@ class ScbfConfig:
     dp_clip_norm: float = 1.0        # L2 clip bound S on the masked delta
     dp_delta: float = 1e-5           # delta of the reported (eps, delta)
     dp_accountant: str = "rdp"       # rdp (Gaussian RDP curve) | classic
+    # subsampled-Gaussian privacy amplification (sync sampling only):
+    # compose the Mironov et al. 2019 subsampled-RDP curve over rounds
+    # with q = per-round inclusion probability.  Refused under fedbuff
+    # (participation there is not an i.i.d. per-round sample) and under
+    # the classic accountant (amplification is an RDP analysis).
+    dp_amplification: bool = False
 
 
 @dataclass(frozen=True)
@@ -247,6 +253,14 @@ class FedConfig:
     """
 
     engine: str = "batched"          # batched (vmapped cohort) | sequential
+    # --- fused round execution (fed/engine fused chunks) ---
+    # fuse_rounds = S > 1 runs S consecutive sync rounds as ONE jitted
+    # lax.scan — train → delta → select → DP → on-device aggregation —
+    # with no host round-trip inside the chunk.  Pruning and fedbuff
+    # fall back to the per-round path (prune changes shapes mid-run;
+    # fedbuff needs per-round server feedback); evaluation coarsens to
+    # chunk boundaries (docs/FED_ENGINE.md §Fused round loop).
+    fuse_rounds: int = 1             # 1 = today's per-round behaviour
     # --- bucketed participant padding (amortise recompiles under
     #     varying per-round P — fed/cohort.bucket_size) ---
     bucket: str = "pow2"             # pow2 (O(log K) compiles) | exact
@@ -276,6 +290,11 @@ class TrainConfig:
     weight_decay: float = 0.0
     momentum: float = 0.0
     global_loops: int = 30
+    # evaluate AUCROC/AUCPR every N loops (plus always the final loop);
+    # non-evaluated loops carry the last-known metrics with
+    # LoopRecord.evaluated = False.  Fused execution additionally
+    # restricts evaluation to chunk boundaries.
+    eval_every: int = 1
     local_epochs: int = 1
     local_batch_size: int = 256
     seed: int = 0

@@ -16,9 +16,19 @@ One ``global loop``:
 
 ``run_federated`` is a thin driver over those three pluggable parts: it
 owns PRNG-key derivation (so engine choice never changes the random
-stream), the lr schedule, differential privacy on the upload path, and
-the per-loop records with the communication accounting used by
-EXPERIMENTS.md (§Paper-validation) and benchmarks/fig2.
+stream), the lr schedule (precomputed as a host-side table — no
+per-loop device sync), differential privacy on the upload path
+(optionally with subsampled-RDP amplification), and the per-loop
+records with the communication accounting used by EXPERIMENTS.md
+(§Paper-validation) and benchmarks/fig2.
+
+With ``FedConfig.fuse_rounds = S > 1`` (sync mode, no pruning, batched
+engine) the driver switches to the **fused round loop** (``_run_fused``):
+S rounds are pre-planned into one static device program — train →
+delta → select → DP → on-device aggregation inside a single
+``lax.scan`` — and the trajectory stays bit-identical to the per-round
+path while evaluation coarsens to chunk boundaries
+(docs/FED_ENGINE.md §Fused round loop).
 """
 from __future__ import annotations
 
@@ -42,7 +52,7 @@ from repro.optim import schedules
 @dataclass
 class LoopRecord:
     loop: int
-    auc_roc: float
+    auc_roc: float               # last-known when evaluated=False
     auc_pr: float
     upload_fraction: float       # fraction of params revealed this loop
     sparse_bytes: int            # what SCBF actually ships
@@ -52,6 +62,14 @@ class LoopRecord:
     hidden_sizes: Tuple[int, ...] = ()
     num_participants: int = 0    # clients whose updates arrived this loop
     epsilon: Optional[float] = None   # cumulative DP ε (None: DP off)
+    # False when this loop skipped evaluation (TrainConfig.eval_every,
+    # or a fused loop that is not a chunk boundary): auc_roc/auc_pr then
+    # carry the most recent evaluation so figures stay well-defined
+    evaluated: bool = True
+    # set only under ScbfConfig.dp_amplification: ``epsilon`` is then
+    # the tighter of the subsampled-amplified and unamplified bounds
+    # (both are valid) and this keeps the unamplified one for reference
+    epsilon_unamplified: Optional[float] = None
 
 
 @dataclass
@@ -59,6 +77,7 @@ class RunResult:
     method: str
     records: List[LoopRecord] = field(default_factory=list)
     dp_delta: Optional[float] = None  # δ of the reported (ε, δ); None: DP off
+    final_params: Optional[Tuple] = None  # the trained global model
 
     @property
     def final(self) -> LoopRecord:
@@ -115,6 +134,45 @@ def _lr_schedule(train_cfg: TrainConfig):
     return schedules.constant(train_cfg.learning_rate)
 
 
+def _lr_table(train_cfg: TrainConfig) -> np.ndarray:
+    """Host-side lr table for the whole run, one device dispatch total.
+
+    The loop used to ``float(lr_fn(...))`` every round — a device→host
+    sync on the hot path.  Evaluating the schedule vmapped once kills
+    that, and the same table slices into the fused path's (S,) lr
+    array, so both paths read identical f32 values.
+    """
+    fn = _lr_schedule(train_cfg)
+    steps = jnp.arange(max(train_cfg.global_loops, 1))
+    return np.asarray(jax.vmap(fn)(steps), dtype=np.float32)
+
+
+def _should_eval(loop: int, total_loops: int, eval_every: int) -> bool:
+    """Evaluate every N loops, plus always the final loop."""
+    return loop == total_loops - 1 or (loop + 1) % max(eval_every, 1) == 0
+
+
+def _derive_round_keys(key, num_clients: int, part, P: int):
+    """(next_key, ckeys, skeys, dp_keys) for one round — THE key-stream
+    contract, shared by the per-round loop and the fused pre-planner so
+    the two paths consume identical randomness by construction: one
+    4-way split per round, training keys indexed by *client id* (so
+    client k's key is independent of who else was sampled), and
+    selection / DP keys split per participant.  Empty rounds still
+    advance the stream (the 4-way split) but return empty key rows.
+    """
+    key, kc, ks, kd = jax.random.split(key, 4)
+    if P:
+        ckeys_all = jax.random.split(kc, num_clients)
+        ckeys = ckeys_all[np.asarray(part)]
+        skeys = jax.random.split(ks, P)
+        dp_keys = jax.random.split(kd, P)
+    else:
+        empty = np.zeros((0, 2), np.uint32)
+        ckeys = skeys = dp_keys = empty
+    return key, ckeys, skeys, dp_keys
+
+
 def run_federated(cohort: MedicalCohort,
                   train_cfg: TrainConfig,
                   method: str = "scbf",
@@ -131,8 +189,13 @@ def run_federated(cohort: MedicalCohort,
     trajectories.  The batched engine buckets the per-round participant
     count (``fed.bucket``) so varying P under sampling/dropout does not
     recompile, and shards the bucketed cohort over a pod mesh when
-    ``fed.pods > 1`` (docs/FED_ENGINE.md).  Rounds where every sampled
-    client drops out are skipped cleanly (no P=0 dispatch).  Ragged cohorts (Dirichlet) batch differently —
+    ``fed.pods > 1`` (docs/FED_ENGINE.md).  ``fed.fuse_rounds > 1``
+    runs whole chunks of sync rounds as one device program with
+    on-device aggregation (bit-identical trajectory; evaluation at
+    chunk boundaries only), falling back to the per-round loop for
+    pruning, fedbuff, or the sequential engine.  Rounds where every
+    sampled client drops out are skipped cleanly (no P=0 dispatch).
+    Ragged cohorts (Dirichlet) batch differently —
     the padded engine runs ``n_max // B`` masked batches per epoch
     while the sequential loop runs ``n_k // B`` — so there the engine
     choice selects between two legitimate trainings, not two
@@ -177,7 +240,9 @@ def run_federated(cohort: MedicalCohort,
     # fedbuff only: stale version snapshots (sync trains on the current
     # params, so keeping the initial model alive would be pure waste)
     history = {0: params} if fed.mode == "fedbuff" else None
-    lr_fn = _lr_schedule(train_cfg)
+    # host-side lr table: one device dispatch for the whole run instead
+    # of a float() sync per loop, and the fused path's (S,) lr array
+    lrs = _lr_table(train_cfg)
 
     dp_on = method == "scbf" and cfg.dp_noise_multiplier > 0
     if dp_on:
@@ -185,39 +250,106 @@ def run_federated(cohort: MedicalCohort,
         # outside its eps <= 1 domain, not after a full training loop
         privacy.epsilon_for(cfg.dp_noise_multiplier, cfg.dp_delta,
                             loops=1, accountant=cfg.dp_accountant)
+    amplify = dp_on and cfg.dp_amplification
+    amp_q = 1.0
+    if amplify:
+        if fed.mode == "fedbuff":
+            raise ValueError(
+                "subsampled amplification assumes an i.i.d. per-round "
+                "sample; fedbuff participation is not one — refusing to "
+                "report a silently-wrong amplified ε")
+        if cfg.dp_accountant != "rdp":
+            raise ValueError("dp_amplification is an RDP analysis; it "
+                             f"composes on the subsampled RDP curve, so "
+                             f"dp_accountant={cfg.dp_accountant!r} cannot "
+                             "back the reported ε — use 'rdp'")
+        # q from the scheduler's own cohort-size formula, so the
+        # reported amplification always matches the sampling performed
+        amp_q = min(1.0, scheduler.max_participants / cfg.num_clients)
+        privacy.amplified_epsilon_for(cfg.dp_noise_multiplier, amp_q,
+                                      cfg.dp_delta, rounds=1)  # fail fast
     # ε composes per *release*, not per loop: under sampling, dropout or
     # fedbuff a client uploads in only some rounds, so the spend is
-    # tracked per client and the worst (most-releasing) client reported
+    # tracked per client and the worst (most-releasing) client reported.
+    # (The amplified curve instead composes over rounds — every round is
+    # one inclusion trial for every client.)
     dp_releases = np.zeros(cfg.num_clients, dtype=np.int64)
     original_hidden = sum(f for f in feats[1:-1])
     pruned_so_far = 0
     result = RunResult(method=method + ("wp" if cfg.prune else ""),
                        dp_delta=cfg.dp_delta if dp_on else None)
 
+    def _epsilons(loop: int):
+        """(epsilon, epsilon_unamplified) for the record of ``loop``."""
+        if not dp_on:
+            return None, None
+        un = privacy.epsilon_for(cfg.dp_noise_multiplier, cfg.dp_delta,
+                                 loops=int(dp_releases.max()),
+                                 accountant=cfg.dp_accountant)
+        if amplify:
+            # both accountings are valid upper bounds — amplified
+            # composes over rounds, unamplified over per-client
+            # releases — so report the tighter of the two: under
+            # dropout with q ≈ 1 the release ledger can actually win
+            # (fewer releases than rounds, no amplification to offset)
+            amp = privacy.amplified_epsilon_for(
+                cfg.dp_noise_multiplier, amp_q, cfg.dp_delta,
+                rounds=loop + 1)
+            return min(amp, un), un
+        return un, None
+
+    init_params = params
+    known = {"roc": None, "pr": None}
+
+    def _metrics(params_now, do_eval: bool):
+        """(auc_roc, auc_pr, evaluated) — last-known when not evaluating.
+
+        Before any evaluation has happened the last-known model is the
+        initial one, scored lazily so the default config (eval_every=1,
+        unfused) never pays for it.
+        """
+        if do_eval:
+            known["roc"], known["pr"] = _evaluate(params_now,
+                                                  cohort.x_test,
+                                                  cohort.y_test)
+            return known["roc"], known["pr"], True
+        if known["roc"] is None:
+            known["roc"], known["pr"] = _evaluate(init_params,
+                                                  cohort.x_test,
+                                                  cohort.y_test)
+        return known["roc"], known["pr"], False
+
+    if int(fed.fuse_rounds) < 1:
+        raise ValueError(f"fuse_rounds must be >= 1, got {fed.fuse_rounds}")
+    # the fused path needs: sync planning (fedbuff wants per-round server
+    # feedback), static shapes (pruning reshapes mid-run), and the
+    # batched engine (there is no sequential program to fuse) — anything
+    # else falls back to the per-round loop below
+    use_fused = (int(fed.fuse_rounds) > 1 and fed.mode == "sync"
+                 and not cfg.prune and eng.name == "batched")
+    if use_fused:
+        _run_fused(cohort, train_cfg, method, eng, scheduler, state, key,
+                   lrs, dp_releases, result, _epsilons, _metrics, verbose)
+        return result
+
     for loop in range(train_cfg.global_loops):
         t0 = time.perf_counter()
-        lr = float(lr_fn(jnp.asarray(loop)))
+        lr = float(lrs[loop])
         plan = scheduler.plan(loop, state.version)
         part = plan.participants
         P = plan.num_participants
 
-        # one split per round regardless of engine or cohort size; every
-        # client k's training key is ckeys_all[k], independent of who
-        # else was sampled
-        key, kc, ks, kd = jax.random.split(key, 4)
-        ckeys_all = jax.random.split(kc, cfg.num_clients)
+        key, ckeys, skeys, dp_keys = _derive_round_keys(
+            key, cfg.num_clients, part, P)
 
         payloads, stats = [], []
         if P:
-            ckeys = ckeys_all[np.asarray(part)]
             if fed.mode == "fedbuff":
                 params_for = [history[state.version - int(tau)]
                               for tau in plan.staleness]
             else:
                 params_for = state.params
             if method == "scbf":
-                skeys = jax.random.split(ks, P)
-                dp_keys = jax.random.split(kd, P)
                 payloads, stats = eng.scbf_round(
                     params_for, part, lr, ckeys, skeys, dp_keys, cfg)
                 dp_releases[np.asarray(part)] += 1
@@ -266,7 +398,10 @@ def run_federated(cohort: MedicalCohort,
             state = dataclasses.replace(state, params=params)
 
         wall = time.perf_counter() - t0
-        roc, pr = _evaluate(params, cohort.x_test, cohort.y_test)
+        roc, pr, evaluated = _metrics(
+            params, _should_eval(loop, train_cfg.global_loops,
+                                 train_cfg.eval_every))
+        eps, eps_un = _epsilons(loop)
         n_params = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
                        for l in params)
         rec = LoopRecord(
@@ -277,15 +412,129 @@ def run_federated(cohort: MedicalCohort,
             flops_proxy=float(n_params) * cohort.x_train.shape[0],
             hidden_sizes=tuple(pruning.hidden_sizes(params)),
             num_participants=P,
-            epsilon=privacy.epsilon_for(cfg.dp_noise_multiplier,
-                                        cfg.dp_delta,
-                                        loops=int(dp_releases.max()),
-                                        accountant=cfg.dp_accountant)
-            if dp_on else None)
+            epsilon=eps, evaluated=evaluated, epsilon_unamplified=eps_un)
         result.records.append(rec)
         if verbose:
             print(f"[{result.method}] loop {loop:02d} "
                   f"auc_roc={roc:.4f} auc_pr={pr:.4f} "
                   f"upload={up_frac:.2%} hidden={rec.hidden_sizes} "
                   f"clients={P} t={wall:.2f}s")
+    result.final_params = params
     return result
+
+
+def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
+               eng, scheduler, state, key, lrs: np.ndarray,
+               dp_releases: np.ndarray, result: RunResult,
+               _epsilons, _metrics, verbose: bool) -> None:
+    """The fused round loop: S sync rounds per device program.
+
+    Each chunk is pre-planned into static (S, B) participant/validity
+    arrays (``scheduler.plan_horizon`` + ``eng.prepare_fused_plan``),
+    its PRNG keys pre-split from the *same stream* the per-round loop
+    would consume, and its lr values sliced from the precomputed table —
+    then train → delta → select → DP → on-device aggregation runs as
+    one ``lax.scan`` with zero host crossings (fed/engine
+    ``_fused_scbf_rounds``).  Wire encoding happens once per chunk from
+    the returned (S, B) masked deltas, so per-round upload accounting is
+    byte-identical to the per-round path.  Evaluation coarsens to chunk
+    boundaries (docs/FED_ENGINE.md §Fused round loop).
+    """
+    cfg: ScbfConfig = train_cfg.scbf
+    fed = train_cfg.fed
+    S = int(fed.fuse_rounds)
+    B = eng.fused_num_slots(scheduler.max_participants)
+    total_loops = train_cfg.global_loops
+    # no pruning on the fused path: model geometry is run-constant
+    n_params = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
+                   for l in state.params)
+    hidden = tuple(pruning.hidden_sizes(state.params))
+
+    if min(S, total_loops) > 1:
+        # the first chunk's non-boundary records will need last-known
+        # metrics, so the initial-model evaluation always happens — do
+        # it NOW, before the chunk call donates the initial params'
+        # buffers on backends that support donation (a lazy evaluation
+        # afterwards would read deleted arrays)
+        _metrics(state.params, True)
+
+    loop0 = 0
+    while loop0 < total_loops:
+        t0 = time.perf_counter()
+        chunk = min(S, total_loops - loop0)
+        plans = scheduler.plan_horizon(loop0, chunk, state.version)
+        parts, cks, sks, dks, wts = [], [], [], [], []
+        for plan in plans:
+            part = plan.participants
+            P = plan.num_participants
+            # _derive_round_keys is the single key-stream contract, so
+            # the fused pre-planner consumes EXACTLY what the per-round
+            # loop would have
+            key, ck, sk, dk = _derive_round_keys(key, cfg.num_clients,
+                                                 part, P)
+            cks.append(np.asarray(ck))
+            sks.append(np.asarray(sk))
+            dks.append(np.asarray(dk))
+            parts.append(part)
+            if method == "fedavg":
+                if P:
+                    n = eng.counts[np.asarray(part)].astype(np.float64)
+                    wts.append((n / n.sum()).astype(np.float32))
+                else:
+                    wts.append(np.zeros(0, np.float32))
+        fplan = eng.prepare_fused_plan(
+            parts, lrs[loop0:loop0 + chunk], cks, sks, dks,
+            horizon=S, num_slots=B,
+            weights=wts if method == "fedavg" else None)
+        if method == "scbf":
+            new_params, masked_s, masks_s = eng.fused_scbf_chunk(
+                state.params, fplan, cfg)
+            emitted = eng.emit_fused_payloads(masked_s, masks_s, fplan)
+        else:
+            new_params = eng.fused_fedavg_chunk(state.params, fplan)
+            emitted = [([], [])] * chunk
+        applied = sum(1 for p in plans if p.num_participants)
+        state = dataclasses.replace(state, params=new_params,
+                                    version=state.version + applied)
+        wall_each = (time.perf_counter() - t0) / chunk
+
+        for r, plan in enumerate(plans):
+            loop = loop0 + r
+            P = plan.num_participants
+            payloads, stats = emitted[r]
+            if method == "scbf":
+                up_frac = float(np.mean([s.upload_fraction
+                                         for s in stats])) if stats else 0.0
+                sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
+                    if payloads else 0
+                dense_bytes = int(np.sum([p.dense_nbytes
+                                          for p in payloads])) \
+                    if payloads else 0
+                if P:
+                    dp_releases[np.asarray(plan.participants)] += 1
+            else:
+                up_frac = 1.0 if P else 0.0
+                dense_bytes = n_params * 4 * P
+                sparse_bytes = dense_bytes
+            do_eval = (r == chunk - 1) and _should_eval(
+                loop, total_loops, train_cfg.eval_every)
+            roc, pr, evaluated = _metrics(state.params, do_eval)
+            eps, eps_un = _epsilons(loop)
+            rec = LoopRecord(
+                loop=loop, auc_roc=roc, auc_pr=pr,
+                upload_fraction=up_frac,
+                sparse_bytes=sparse_bytes, dense_bytes=dense_bytes,
+                wall_time=wall_each,
+                flops_proxy=float(n_params) * cohort.x_train.shape[0],
+                hidden_sizes=hidden, num_participants=P,
+                epsilon=eps, evaluated=evaluated,
+                epsilon_unamplified=eps_un)
+            result.records.append(rec)
+            if verbose:
+                print(f"[{result.method}] loop {loop:02d} "
+                      f"auc_roc={roc:.4f} auc_pr={pr:.4f} "
+                      f"upload={up_frac:.2%} hidden={rec.hidden_sizes} "
+                      f"clients={P} t={wall_each:.2f}s"
+                      + ("" if evaluated else " (metrics carried)"))
+        loop0 += chunk
+    result.final_params = state.params

@@ -97,6 +97,37 @@ def bucket_size(num_participants: int, num_clients: int,
     return min(up(pow2), up(num_clients))
 
 
+def horizon_slot_plan(participants: Sequence[np.ndarray], num_slots: int,
+                      horizon: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static ``(S, B)`` participant-index / validity arrays for a fused
+    chunk of ``horizon`` rounds with ``num_slots`` slots each.
+
+    Row r holds round r's participant ids left-aligned; padding slots
+    repeat the round's slot 0 (mirroring the per-round engine's
+    ``_pad_slots``, which keeps padded slots numerically well-behaved —
+    their outputs are zeroed by the validity mask).  Rounds beyond
+    ``len(participants)`` (a short tail chunk padded up to the fused
+    horizon) and empty rounds are all-invalid: the scan body computes
+    garbage for them and the validity mask zeroes every output, so the
+    carry passes through bitwise untouched.
+    """
+    if len(participants) > horizon:
+        raise ValueError(f"{len(participants)} planned rounds exceed the "
+                         f"fused horizon {horizon}")
+    part_idx = np.zeros((horizon, num_slots), dtype=np.int32)
+    valid = np.zeros((horizon, num_slots), dtype=bool)
+    for r, part in enumerate(participants):
+        p = np.asarray(part, dtype=np.int32)
+        if p.size > num_slots:
+            raise ValueError(f"round {r}: {p.size} participants exceed "
+                             f"{num_slots} fused slots")
+        if p.size:
+            part_idx[r, :p.size] = p
+            part_idx[r, p.size:] = p[0]
+            valid[r, :p.size] = True
+    return part_idx, valid
+
+
 def pad_clients(clients: Sequence[Tuple[np.ndarray, np.ndarray]]
                 ) -> PaddedCohort:
     """Stack ragged client shards into a rectangular padded cohort."""

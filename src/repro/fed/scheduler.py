@@ -23,11 +23,19 @@ staleness and all (tests/test_fed_engine.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
 import numpy as np
 
 from repro.config import FedConfig
+
+# ``plan_horizon`` (both schedulers) is the fused-execution planning
+# API: the driver asks for the next H rounds up front so a whole chunk
+# of rounds can run as one device program (repro.fed.engine).  Sync
+# plans never depend on the server state, so any horizon is just H
+# consecutive ``plan`` calls off the same RNG — byte-identical to
+# planning round by round.  FedBuff plans DO depend on the server
+# version advancing between rounds, so its horizon is capped at 1.
 
 # Per-tick completion probabilities for the fedbuff simulation: a fast
 # client usually reports within ~1 tick; a straggler takes ~4, which is
@@ -62,8 +70,7 @@ class SyncScheduler:
 
     def plan(self, round_index: int, server_version: int = 0) -> RoundPlan:
         cfg, rng = self.cfg, self.rng
-        m = max(1, int(round(cfg.sample_fraction * self.num_clients)))
-        m = min(m, self.num_clients)
+        m = self.max_participants
         sampled = np.sort(rng.choice(self.num_clients, size=m,
                                      replace=False))
         drop = rng.random(m) < cfg.dropout_rate
@@ -78,6 +85,29 @@ class SyncScheduler:
             sampled=sampled,
             dropped=sampled[drop],
             stragglers=sampled[strag])
+
+    @property
+    def max_participants(self) -> int:
+        """Per-round cohort size m = round(sample_fraction · K), the
+        single source of that formula: ``plan`` samples exactly m
+        (dropout only removes), fused execution sizes its static (S, B)
+        plan to it, and the driver's amplification q is m/K.
+        """
+        m = max(1, int(round(self.cfg.sample_fraction * self.num_clients)))
+        return min(m, self.num_clients)
+
+    def plan_horizon(self, start_round: int, horizon: int,
+                     server_version: int = 0) -> List[RoundPlan]:
+        """Plan the next ``horizon`` rounds in one call.
+
+        Draws from the same RNG as per-round ``plan`` calls, so a fused
+        driver and a per-round driver with the same seed see the exact
+        same participation trace.
+        """
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
+        return [self.plan(start_round + i, server_version)
+                for i in range(horizon)]
 
     def referenced_versions(self) -> Set[int]:
         return set()                       # sync trains on the current version
@@ -128,6 +158,20 @@ class FedBuffScheduler:
             sampled=started,
             dropped=np.array(sorted(dropped), dtype=np.int64),
             stragglers=np.array(sorted(stragglers), dtype=np.int64))
+
+    def plan_horizon(self, start_round: int, horizon: int,
+                     server_version: int = 0) -> List[RoundPlan]:
+        """FedBuff plans one round at a time: each plan's staleness and
+        refill depend on the server version the *previous* round's
+        aggregation produced, so a multi-round horizon would silently
+        fabricate staleness.  Refused rather than approximated."""
+        if horizon != 1:
+            raise ValueError(
+                "fedbuff scheduling needs per-round server-version "
+                f"feedback; plan_horizon supports horizon=1 only, got "
+                f"{horizon} (fused execution must fall back to the "
+                "per-round path)")
+        return [self.plan(start_round, server_version)]
 
     def referenced_versions(self) -> Set[int]:
         """Server versions some in-flight client is still training from

@@ -31,6 +31,68 @@ from repro.config import FedConfig, ScbfConfig
 from repro.core import server
 
 
+# ---------------------------------------------------------------------------
+# Pure on-device reducers — the fused execution path's server step.
+#
+# The stateful strategies below decode wire payloads on the host; a
+# fused chunk (repro.fed.engine) keeps whole rounds on device, so its
+# scan body needs the same aggregation rules as pure stacked-array
+# reducers with NO wire decode on the hot path.  Wire encoding still
+# happens — off the critical path, from the chunk's returned stacked
+# deltas — so repro.comm.wire stays the single source of truth for
+# upload-byte accounting.
+# ---------------------------------------------------------------------------
+
+def scbf_sum_step(params, stacked_deltas):
+    """W ← W + Σ_b ΔW̃_b over the slot axis of a ``(B, ...)`` stack.
+
+    Accumulates the deltas *delta-first in slot order* via a
+    ``lax.scan`` (not a tree reduction), then adds the total to the
+    parameters once — exactly the accumulation ``wire.apply_payloads``
+    performs (zero-init scatter in client order, one add into W), which
+    is what keeps the fused and per-round trajectories bit-identical.
+    Invalid slots arrive already zeroed by the engine's validity mask,
+    and ``x + 0.0`` is a bitwise no-op, so padding (including
+    fully-empty rounds) passes the carry through untouched.
+    """
+    zero = jax.tree_util.tree_map(
+        lambda ref: jnp.zeros(ref.shape, jnp.float32), params)
+
+    def add_slot(acc, delta):
+        return jax.tree_util.tree_map(
+            lambda a, d: a + d.astype(jnp.float32), acc, delta), None
+
+    total, _ = jax.lax.scan(add_slot, zero, stacked_deltas)
+    return jax.tree_util.tree_map(
+        lambda p, t: (p.astype(jnp.float32) + t).astype(p.dtype),
+        params, total)
+
+
+def fedavg_step(params, stacked_params, weights):
+    """W ← Σ_b w_b W_b over the slot axis (McMahan example weighting).
+
+    ``weights`` is the ``(B,)`` normalised weight vector with exact
+    zeros on invalid slots; accumulation runs in slot order to mirror
+    ``core.server.fedavg_update``.  A round with no valid slot (all
+    weights zero) returns ``params`` unchanged, matching the per-round
+    strategy's skip of empty contributions.
+    """
+    zero = jax.tree_util.tree_map(
+        lambda ref: jnp.zeros(ref.shape, jnp.float32), params)
+
+    def add_slot(acc, wp):
+        w, p = wp
+        return jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(jnp.float32) * w, acc, p), None
+
+    acc, _ = jax.lax.scan(add_slot, zero, (weights, stacked_params))
+    any_valid = jnp.sum(weights) > 0
+    return jax.tree_util.tree_map(
+        lambda a, ref: jnp.where(any_valid, a,
+                                 ref.astype(jnp.float32)).astype(ref.dtype),
+        acc, params)
+
+
 @dataclass
 class ServerState:
     params: Any                      # current global model

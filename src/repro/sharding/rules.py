@@ -103,6 +103,21 @@ def cohort_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:
     return (NamedSharding(mesh, P("pod")), NamedSharding(mesh, P()))
 
 
+def fused_plan_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:
+    """(round_slot_sharding, replicated) for fused ``(S, B, ...)`` plans.
+
+    A fused chunk scans over the round axis S (axis 0 — the scan never
+    shards) while each round's slot axis B (axis 1) splits over ``pod``,
+    exactly like the per-round cohort sharding with one leading round
+    dimension.  The scan carry (the global model) stays replicated —
+    the same weights-never-shard-over-pod contract as
+    ``cohort_shardings``.
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'pod' axis")
+    return (NamedSharding(mesh, P(None, "pod")), NamedSharding(mesh, P()))
+
+
 # ---------------------------------------------------------------------------
 # Activations
 # ---------------------------------------------------------------------------

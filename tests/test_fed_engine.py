@@ -548,6 +548,82 @@ def test_rdp_accountant_default_and_classic_domain():
     assert privacy.epsilon_for(0.0) == np.inf
 
 
+def test_subsampled_rdp_amplification_bounds():
+    """Subsampled-Gaussian RDP: q=1 reduces exactly to the unamplified
+    curve, q<1 amplifies (smaller ε), the curve is monotone in q and in
+    rounds, and the integer-order domain is enforced."""
+    from repro.core import privacy
+    sigma, delta, rounds = 2.0, 1e-5, 30
+    full = privacy.epsilon_for(sigma, delta, loops=rounds)
+    amp_small = privacy.amplified_epsilon_for(sigma, 0.1, delta, rounds)
+    amp_mid = privacy.amplified_epsilon_for(sigma, 0.5, delta, rounds)
+    amp_q1 = privacy.amplified_epsilon_for(sigma, 1.0, delta, rounds)
+    assert 0 < amp_small < amp_mid < full
+    assert amp_q1 == full                       # exact reduction at q=1
+    # composition accumulates
+    assert privacy.amplified_epsilon_for(sigma, 0.1, delta, 1) < amp_small
+    # per-order reduction at q=1 matches the Gaussian RDP curve exactly
+    assert privacy.subsampled_gaussian_rdp(sigma, 1.0, 4) == \
+        privacy.gaussian_rdp(sigma, 4.0)
+    assert privacy.subsampled_gaussian_rdp(sigma, 0.0, 4) == 0.0
+    with pytest.raises(ValueError):
+        privacy.subsampled_gaussian_rdp(sigma, 0.1, 1)      # order >= 2
+    with pytest.raises(ValueError):
+        privacy.subsampled_gaussian_rdp(sigma, 0.1, 2.5)    # integer only
+    with pytest.raises(ValueError):
+        privacy.subsampled_gaussian_rdp(sigma, 1.5, 4)      # q in [0, 1]
+    # dp-off / no-rounds sentinels mirror epsilon_for
+    assert privacy.amplified_epsilon_for(0.0, 0.1) == np.inf
+    assert privacy.amplified_epsilon_for(sigma, 0.1, delta, 0) == 0.0
+
+
+def test_driver_reports_amplified_and_unamplified_epsilon(cohort):
+    """One seeded sampled run with dp_amplification on: every record
+    carries both the operative (amplified) ε and the unamplified one,
+    with the amplified strictly tighter; the unamplified ledger matches
+    a run with amplification off bit-for-bit."""
+    def tcfg(amplify):
+        # batch 32: K=8 shards hold 60 rows, so batch 64 would train
+        # zero batches and the run would be a no-op
+        return TrainConfig(
+            learning_rate=0.05, global_loops=2, local_batch_size=32,
+            local_epochs=1,
+            scbf=ScbfConfig(upload_rate=0.1, num_clients=8,
+                            dp_noise_multiplier=2.0, dp_clip_norm=1.0,
+                            dp_amplification=amplify),
+            fed=FedConfig(sample_fraction=0.25))
+    res = run_federated(cohort, tcfg(True), method="scbf",
+                        mlp_features=FEATS)
+    assert sum(r.sparse_bytes for r in res.records) > 0
+    for r in res.records:
+        assert r.epsilon is not None and r.epsilon_unamplified is not None
+        assert 0 < r.epsilon < r.epsilon_unamplified
+    plain = run_federated(cohort, tcfg(False), method="scbf",
+                          mlp_features=FEATS)
+    assert [r.epsilon_unamplified for r in res.records] == \
+        [r.epsilon for r in plain.records]
+    assert all(r.epsilon_unamplified is None for r in plain.records)
+
+
+def test_amplification_refused_where_unsound(cohort):
+    """Amplification must refuse fedbuff participation (not an i.i.d.
+    per-round sample) and the classic accountant (it is an RDP
+    analysis) instead of reporting a silently-wrong ε."""
+    fedbuff = dataclasses.replace(
+        TrainConfig(learning_rate=0.05, global_loops=2,
+                    local_batch_size=64, local_epochs=1,
+                    scbf=ScbfConfig(upload_rate=0.1, num_clients=8,
+                                    dp_noise_multiplier=2.0,
+                                    dp_amplification=True)),
+        fed=FedConfig(mode="fedbuff"))
+    with pytest.raises(ValueError, match="fedbuff"):
+        run_federated(cohort, fedbuff, method="scbf", mlp_features=FEATS)
+    classic = _tcfg(dp_noise_multiplier=5.0, dp_amplification=True,
+                    dp_accountant="classic")
+    with pytest.raises(ValueError, match="rdp"):
+        run_federated(cohort, classic, method="scbf", mlp_features=FEATS)
+
+
 def test_driver_rejects_bad_accountant_before_training(cohort):
     """A bad accountant config must fail at run start, not after a full
     training loop when the first LoopRecord is assembled."""
