@@ -13,15 +13,21 @@ runner cannot fail the gate spuriously:
     of identical code (the repo's own measurements of the K=500 row
     range 8-13x), so gating it would flake — the rows must still be
     *present*, they are just informational.
+  * **fused-SCBFwP throughput ratio** — fused mask-mode SCBFwP vs
+    per-round reshape SCBFwP, same-process cold runs: a drop below 75%
+    of the baseline ratio fails.  Its steady-state pruning time saving
+    must additionally stay positive (the paper's wall-time claim) —
+    gated as a sign, not a magnitude, so runner jitter cannot flake it.
   * **compile counts** — fully deterministic; ANY growth fails (a
-    retracing regression is exactly the bug class PR 3/4 fixed).
+    retracing regression is exactly the bug class PR 3/4 fixed, and
+    the fused-SCBFwP count is the PR 5 acceptance bar: <= 2).
 
 Refresh the baseline after an intentional perf change with EXACTLY the
 command CI runs (ci.yml bench-smoke), then commit the result with a
 note on what changed:
 
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --fuse \
-        --pods 2 --json-out benchmarks/baselines/fed_engine.json
+        --prune --pods 2 --json-out benchmarks/baselines/fed_engine.json
 """
 from __future__ import annotations
 
@@ -75,6 +81,26 @@ def compare(fresh: dict, baseline: dict) -> List[str]:
     elif b and not f:
         failures.append("fused section missing from fresh results "
                         "(baseline has one — run the bench with --fuse)")
+
+    p, bp = fresh.get("prune"), baseline.get("prune")
+    if p and bp:
+        floor = bp["speedup"] * RATIO_TOLERANCE
+        if p["speedup"] < floor:
+            failures.append(
+                f"prune: fused-SCBFwP speedup {p['speedup']:.2f}x < "
+                f"{floor:.2f}x (75% of baseline {bp['speedup']:.2f}x)")
+        if p["compiles"] > bp["compiles"]:
+            failures.append(
+                f"prune: {p['compiles']} fused compiles > baseline "
+                f"{bp['compiles']} (the <= 2 acceptance bar)")
+        if p["steady"]["time_saving"] <= 0:
+            failures.append(
+                "prune: steady-state pruning time saving "
+                f"{p['steady']['time_saving']:.1%} is not positive "
+                "(pruned runs must be faster than unpruned)")
+    elif bp and not p:
+        failures.append("prune section missing from fresh results "
+                        "(baseline has one — run the bench with --prune)")
     return failures
 
 

@@ -224,6 +224,18 @@ class ScbfConfig:
     prune: bool = False
     prune_rate: float = 0.10         # theta — fraction pruned per loop
     prune_total: float = 0.47        # theta_total
+    # how a pruned neuron is removed (repro.core.pruning):
+    #   reshape  host-side slicing between loops — physically smaller
+    #            models immediately, but every step recompiles every
+    #            jitted program and the fused round loop cannot run
+    #   mask     static-shape keep-masks — geometry stays run-constant
+    #            (no recompiles, fused-path compatible, scbf only);
+    #            with prune_compact the model is sliced down ONCE when
+    #            the cumulative budget is exhausted
+    prune_impl: str = "reshape"      # reshape | mask
+    # mask mode: compact physically (one extra compile) the moment
+    # pruning completes, so flops/bytes shrink for the rest of the run
+    prune_compact: bool = True
     # scale-out knobs (beyond paper)
     factored: bool = True            # factored channel scores for big models
     compressed_exchange: bool = False  # top-k gather exchange across pods
@@ -256,10 +268,12 @@ class FedConfig:
     # --- fused round execution (fed/engine fused chunks) ---
     # fuse_rounds = S > 1 runs S consecutive sync rounds as ONE jitted
     # lax.scan — train → delta → select → DP → on-device aggregation —
-    # with no host round-trip inside the chunk.  Pruning and fedbuff
-    # fall back to the per-round path (prune changes shapes mid-run;
-    # fedbuff needs per-round server feedback); evaluation coarsens to
-    # chunk boundaries (docs/FED_ENGINE.md §Fused round loop).
+    # with no host round-trip inside the chunk.  Reshape-mode pruning
+    # and fedbuff fall back to the per-round path (reshape changes
+    # shapes mid-run; fedbuff needs per-round server feedback) while
+    # mask-mode pruning (ScbfConfig.prune_impl="mask") runs fused;
+    # evaluation coarsens to chunk boundaries (docs/FED_ENGINE.md
+    # §Fused round loop / §Pruning on the fused path).
     fuse_rounds: int = 1             # 1 = today's per-round behaviour
     # --- bucketed participant padding (amortise recompiles under
     #     varying per-round P — fed/cohort.bucket_size) ---

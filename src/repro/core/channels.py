@@ -44,8 +44,9 @@ import jax.numpy as jnp
 MAX_MATERIALIZED = 1 << 22
 
 
-def layer_scores(grads: Sequence[dict],
-                 normalize: bool = False) -> List[jnp.ndarray]:
+def layer_scores(grads: Sequence[dict], normalize: bool = False,
+                 neuron_masks: Sequence[jnp.ndarray] | None = None
+                 ) -> List[jnp.ndarray]:
     """Per-layer neuron scores s_l for an MLP gradient pytree.
 
     ``grads`` is a sequence of {"w": (fan_in, fan_out), "b": (fan_out,)}.
@@ -58,18 +59,54 @@ def layer_scores(grads: Sequence[dict],
     its neurons and the edge-union balloons — see EXPERIMENTS.md
     §Paper-validation note 3).  Normalisation is our beyond-paper option
     that equalises the layers' influence.
+
+    ``neuron_masks`` (mask-mode SCBFwP): per-hidden-layer keep-masks.
+    Pruned neurons score ``-inf``, which removes them from every
+    downstream consumer at static shape — the masked quantile skips
+    non-finite channels, ``max`` ignores them (kept scores are >= 0),
+    and the edge rule's pair-sums through a pruned neuron are ``-inf``
+    so no pruned edge can clear any threshold.  The output layer is
+    never masked.  Normalisation averages over kept neurons only.
     """
     scores = []
-    for g in grads:
+    for l, g in enumerate(grads):
         w = g["w"].astype(jnp.float32)
         s = jnp.sum(w * w, axis=0)
         if "b" in g and g["b"] is not None:
             b = g["b"].astype(jnp.float32)
             s = s + b * b
+        m = None
+        if neuron_masks is not None and l < len(neuron_masks):
+            m = neuron_masks[l]
         if normalize:
-            s = s / jnp.maximum(jnp.mean(s), 1e-30)
+            if m is None:
+                mean = jnp.mean(s)
+            else:
+                mean = jnp.sum(s * m) / jnp.maximum(jnp.sum(m), 1.0)
+            s = s / jnp.maximum(mean, 1e-30)
+        if m is not None:
+            s = jnp.where(m > 0, s, -jnp.inf)
         scores.append(s)
     return scores
+
+
+def masked_quantile(values: jnp.ndarray, q: float) -> jnp.ndarray:
+    """q-quantile over the finite entries of a flat score vector.
+
+    The mask-mode replacement for ``jnp.quantile``: invalid channels
+    arrive as ``-inf`` (layer_scores), an ascending sort pushes them to
+    the front, and the quantile position is taken over the finite tail
+    only — same linear interpolation as ``jnp.quantile``, static shapes
+    throughout (the finite count is a traced scalar).
+    """
+    vals = jnp.sort(values)
+    n = vals.shape[0]
+    n_valid = jnp.sum(jnp.isfinite(vals))
+    pos = (n - n_valid) + q * jnp.maximum(n_valid - 1, 0)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
+    hi = jnp.clip(jnp.ceil(pos).astype(jnp.int32), 0, n - 1)
+    frac = pos - jnp.floor(pos)
+    return vals[lo] * (1.0 - frac) + vals[hi] * frac
 
 
 def materialize_channel_tensor(scores: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -93,25 +130,40 @@ def num_channels(scores: Sequence[jnp.ndarray]) -> int:
 def channel_quantile(scores: Sequence[jnp.ndarray], upload_rate: float,
                      *, selection: str = "positive",
                      key: jax.Array | None = None,
-                     num_samples: int = 1 << 16) -> jnp.ndarray:
+                     num_samples: int = 1 << 16,
+                     masked: bool = False) -> jnp.ndarray:
     """Threshold q such that ~``upload_rate`` of channels have T > q
     (positive selection) or ~``upload_rate`` have T < q (negative).
 
     Exact when the channel tensor is small enough to materialise;
     stochastic (sampled channels) otherwise.
+
+    ``masked=True`` (mask-mode SCBFwP): ``scores`` carry ``-inf`` on
+    pruned neurons.  The materialised path takes the quantile over the
+    *valid* (finite) channels only — the effective channel population of
+    the masked-pruned model, matching what a physically-compacted model
+    would rank — and the stochastic path samples kept neurons only
+    (categorical over the keep-mask).  ``masked=False`` keeps the exact
+    original arithmetic, bit for bit.
     """
     if selection not in ("positive", "negative"):
         raise ValueError(f"selection must be positive|negative, got {selection}")
     q = (1.0 - upload_rate) if selection == "positive" else upload_rate
     if num_channels(scores) <= MAX_MATERIALIZED:
         t = materialize_channel_tensor(scores).reshape(-1)
+        if masked:
+            return masked_quantile(t, q)
         return jnp.quantile(t, q)
     if key is None:
         key = jax.random.PRNGKey(0)
     keys = jax.random.split(key, len(scores))
     sampled = jnp.zeros((num_samples,), jnp.float32)
     for k, s in zip(keys, scores):
-        idx = jax.random.randint(k, (num_samples,), 0, s.shape[0])
+        if masked:
+            logits = jnp.where(jnp.isfinite(s), 0.0, -jnp.inf)
+            idx = jax.random.categorical(k, logits, shape=(num_samples,))
+        else:
+            idx = jax.random.randint(k, (num_samples,), 0, s.shape[0])
         sampled = sampled + s[idx]
     return jnp.quantile(sampled, q)
 

@@ -25,21 +25,28 @@ from repro.metrics.auc import bce_elementwise, binary_cross_entropy
 from repro.models.mlp_net import mlp_forward
 
 
-def bce_loss(params, xb, yb):
-    return binary_cross_entropy(mlp_forward(params, xb), yb)
+def bce_loss(params, xb, yb, neuron_masks=None):
+    return binary_cross_entropy(mlp_forward(params, xb, neuron_masks), yb)
 
 
-def masked_bce_loss(params, xb, yb, wb):
+def masked_bce_loss(params, xb, yb, wb, neuron_masks=None):
     """Weighted-mean BCE; zero-weight (padding) examples contribute 0."""
-    per = bce_elementwise(mlp_forward(params, xb), yb)
+    per = bce_elementwise(mlp_forward(params, xb, neuron_masks), yb)
     return jnp.sum(per * wb) / jnp.maximum(jnp.sum(wb), 1.0)
 
 
 def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
                      y: jnp.ndarray, lr: float, key: jax.Array,
-                     batch_size: int = 256, epochs: int = 1
-                     ) -> Tuple[dict, ...]:
-    """SGD over the client shard; returns the updated params."""
+                     batch_size: int = 256, epochs: int = 1,
+                     neuron_masks=None) -> Tuple[dict, ...]:
+    """SGD over the client shard; returns the updated params.
+
+    ``neuron_masks`` (mask-mode SCBFwP) masks pruned hidden neurons out
+    of the forward pass: their parameter gradients are then exactly
+    zero, so the reported delta never touches a pruned coordinate and
+    the trained shapes stay run-constant.  ``None`` is the original
+    unmasked trace.
+    """
     n = (x.shape[0] // batch_size) * batch_size
     grad_fn = jax.grad(bce_loss)
 
@@ -49,7 +56,7 @@ def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
         yb = y[perm].reshape(-1, batch_size)
 
         def step(p, batch):
-            g = grad_fn(p, batch[0], batch[1])
+            g = grad_fn(p, batch[0], batch[1], neuron_masks)
             p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
             return p, None
 
@@ -64,7 +71,8 @@ def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
 def masked_local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
                             y: jnp.ndarray, w: jnp.ndarray, lr: float,
                             key: jax.Array, batch_size: int = 256,
-                            epochs: int = 1) -> Tuple[dict, ...]:
+                            epochs: int = 1, neuron_masks=None
+                            ) -> Tuple[dict, ...]:
     """``local_train_impl`` with per-example weights (1 real / 0 padding).
 
     Batches are drawn from the padded shard; the weighted-mean loss
@@ -82,7 +90,7 @@ def masked_local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
         wb = w[perm].reshape(-1, batch_size)
 
         def step(p, batch):
-            g = grad_fn(p, batch[0], batch[1], batch[2])
+            g = grad_fn(p, batch[0], batch[1], batch[2], neuron_masks)
             p = jax.tree_util.tree_map(lambda a, ga: a - lr * ga, p, g)
             return p, None
 

@@ -6,74 +6,154 @@ activation is exactly zero.  Each pruning step removes the θ (prune_rate)
 fraction of *remaining* hidden neurons with the highest APoZ, until
 θ_total of the original neurons are gone.  The server prunes on the
 validation set and pushes the pruned structure to every client
-(Algorithm 1) — here that is ``prune_structure`` returning per-layer kept
-indices, and ``apply_structure`` slicing any compatible param pytree.
+(Algorithm 1).
 
-Pruning *really* changes shapes (host-side numpy slicing between global
-loops), so later loops train/upload strictly smaller models — that is
-where the paper's 57% wall-time saving comes from.
+Two implementations of "remove a neuron" (``ScbfConfig.prune_impl``):
+
+``reshape``  host-side numpy slicing between global loops
+             (``apply_structure``): later loops train/upload strictly
+             smaller models — the paper's 57% wall-time saving — but
+             every step changes array shapes, so every jitted program
+             recompiles per step and the fused round loop cannot run.
+
+``mask``     static-shape per-layer keep-masks (``update_keep_masks``):
+             geometry stays run-constant and a ``(H_l,)`` validity mask
+             zeroes pruned neurons in forward/backward, channel
+             selection, DP and aggregation — no recompiles, fused-path
+             compatible.  ``Pruner`` optionally compacts physically
+             (one ``apply_structure`` call, one extra compile) the
+             moment the cumulative budget is exhausted, so the flop and
+             byte savings still materialise for the rest of the run.
+
+``Pruner`` is the driver-side state machine shared by the per-round and
+fused loops in ``repro.core.scbf`` — sharing it is what makes the two
+paths' keep-mask trajectories identical by construction.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.mlp_net import mlp_activations
+from repro.comm import wire
+from repro.kernels.apoz import apoz_batch_fractions
 
 
 def apoz_scores(params: Sequence[dict], x_val: np.ndarray,
-                batch_size: int = 2048) -> List[np.ndarray]:
-    """APoZ per hidden neuron, streamed over the validation set."""
-    acts_fn = jax.jit(lambda p, xb: [jnp.mean(a == 0.0, axis=0)
-                                     for a in mlp_activations(p, xb)])
+                batch_size: int = 2048,
+                neuron_masks=None) -> List[np.ndarray]:
+    """APoZ per hidden neuron, streamed over the validation set.
+
+    Delegates each batch to the module-level jitted scorer
+    (``repro.kernels.apoz.apoz_batch_fractions``) — one compile per
+    (param-geometry, batch, mask) signature for the whole process, not
+    one per call.  Partial tail batches (and validation sets smaller
+    than one batch) weight into the mean by their true size.  An empty
+    validation set cannot rank neurons and raises instead of crashing
+    with an unbound accumulator.
+    """
+    if int(np.asarray(x_val).shape[0]) == 0:
+        raise ValueError("APoZ pruning needs a non-empty validation set; "
+                         "got 0 examples (disable pruning or provide "
+                         "validation data)")
     totals, count = None, 0
     for start in range(0, x_val.shape[0], batch_size):
         xb = jnp.asarray(x_val[start:start + batch_size])
-        frac = acts_fn(tuple(params), xb)
+        frac = apoz_batch_fractions(tuple(params), xb, neuron_masks)
         n = xb.shape[0]
         if totals is None:
             totals = [np.asarray(f) * n for f in frac]
         else:
             totals = [t + np.asarray(f) * n for t, f in zip(totals, frac)]
         count += n
-    return [t / max(count, 1) for t in totals]
+    return [t / count for t in totals]
+
+
+def _step_budget(prune_rate: float, already_pruned: int,
+                 original_hidden: int, prune_total: float) -> int:
+    """Neurons to remove this step: θ of the REMAINING neurons.
+
+    Paper §2.1 prunes θ of what is still there each loop (geometric
+    decay), capped so the cumulative removal never exceeds
+    ``prune_total`` of the original count.  (The budget was previously
+    computed as θ of the *original* count, contradicting both the paper
+    and this module's own docstring — see tests/test_pruning.py
+    ``test_plan_prune_budget_is_theta_of_remaining``.)
+    """
+    remaining = original_hidden - already_pruned
+    budget = int(prune_rate * remaining)
+    allow = int(prune_total * original_hidden) - already_pruned
+    return max(0, min(budget, allow))
+
+
+def _greedy_remove(apoz: Sequence[np.ndarray], keep: List[np.ndarray],
+                   budget: int) -> List[np.ndarray]:
+    """Remove up to ``budget`` currently-kept neurons, highest APoZ
+    first, never emptying a layer.  Mutates and returns the boolean
+    keep-masks.
+
+    Already-removed neurons rank ``-inf`` so they can never be removed
+    twice (in mask mode their activations are exactly zero, i.e. APoZ
+    1.0 — without the guard they would win every step).  Ties break by
+    stable sort: equal-APoZ neurons go earliest-layer, lowest-index
+    first, deterministically.
+    """
+    flat = np.concatenate([np.where(k, np.asarray(a, np.float64), -np.inf)
+                           for a, k in zip(apoz, keep)])
+    owner = np.concatenate([np.full(a.shape[0], l)
+                            for l, a in enumerate(apoz)])
+    layer_off = np.cumsum([0] + [a.shape[0] for a in apoz])
+    order = np.argsort(-flat, kind="stable")
+    removed = 0
+    for idx in order:
+        if removed >= budget:
+            break
+        if not np.isfinite(flat[idx]):        # only already-removed left
+            break
+        l = owner[idx]
+        local = idx - layer_off[l]
+        if keep[l].sum() <= 1:                # never empty a layer
+            continue
+        keep[l][local] = False
+        removed += 1
+    return keep
 
 
 def plan_prune(apoz: Sequence[np.ndarray], prune_rate: float,
                already_pruned: int, original_hidden: int,
                prune_total: float) -> List[np.ndarray]:
-    """Indices of neurons to KEEP per hidden layer.
+    """Indices of neurons to KEEP per hidden layer (reshape mode).
 
-    Removes the globally-highest-APoZ ``prune_rate * original_hidden``
-    neurons this loop, capped so the cumulative removal stays within
-    ``prune_total`` of the original count.  At least one neuron per layer
-    is always kept.
+    Removes the globally-highest-APoZ θ-of-remaining neurons this loop
+    (``_step_budget``), capped so the cumulative removal stays within
+    ``prune_total`` of the original count.  At least one neuron per
+    layer is always kept.
     """
-    budget = int(prune_rate * original_hidden)
-    remaining_allow = int(prune_total * original_hidden) - already_pruned
-    budget = max(0, min(budget, remaining_allow))
+    budget = _step_budget(prune_rate, already_pruned, original_hidden,
+                          prune_total)
+    keep = [np.ones(a.shape[0], bool) for a in apoz]
+    keep = _greedy_remove(apoz, keep, budget)
+    return [np.where(m)[0] for m in keep]
 
-    flat = np.concatenate(apoz)
-    owner = np.concatenate([np.full(a.shape[0], l)
-                            for l, a in enumerate(apoz)])
-    order = np.argsort(-flat)                     # most-zero first
-    keep_mask = [np.ones(a.shape[0], bool) for a in apoz]
-    layer_off = np.cumsum([0] + [a.shape[0] for a in apoz])
-    removed = 0
-    for idx in order:
-        if removed >= budget:
-            break
-        l = owner[idx]
-        local = idx - layer_off[l]
-        if keep_mask[l].sum() <= 1:               # never empty a layer
-            continue
-        if keep_mask[l][local]:
-            keep_mask[l][local] = False
-            removed += 1
-    return [np.where(m)[0] for m in keep_mask]
+
+def update_keep_masks(apoz: Sequence[np.ndarray],
+                      keep_masks: Sequence[np.ndarray], prune_rate: float,
+                      prune_total: float) -> List[np.ndarray]:
+    """One mask-mode pruning step over run-constant geometry.
+
+    ``keep_masks`` are full-size boolean masks (True = still alive);
+    the returned masks have this step's θ-of-remaining highest-APoZ
+    *kept* neurons switched off.  Same greedy core, same budget rule,
+    and same tie behaviour as ``plan_prune``, so for equal APoZ scores
+    the mask-mode removal trajectory is the reshape-mode one.
+    """
+    keep = [np.asarray(m, bool).copy() for m in keep_masks]
+    original_hidden = sum(m.shape[0] for m in keep)
+    already = original_hidden - sum(int(m.sum()) for m in keep)
+    budget = _step_budget(prune_rate, already, original_hidden, prune_total)
+    return _greedy_remove(apoz, keep, budget)
 
 
 def apply_structure(params: Sequence[dict], keep: Sequence[np.ndarray]
@@ -99,3 +179,198 @@ def apply_structure(params: Sequence[dict], keep: Sequence[np.ndarray]
 
 def hidden_sizes(params: Sequence[dict]) -> List[int]:
     return [int(layer["w"].shape[1]) for layer in params[:-1]]
+
+
+def expand_payloads(payloads: Sequence[wire.Payload],
+                    keep: Sequence[np.ndarray],
+                    params: Sequence[dict]) -> List[wire.Payload]:
+    """Remap effective-geometry wire payloads onto the full geometry.
+
+    Mask-mode clients ship payloads in the *effective* coordinate
+    system — the broadcast keep sets define it identically on both ends
+    — while the server stores run-constant full-geometry tensors.  This
+    maps each payload's flat indices back to original neuron ids (w:
+    rows through ``keep[l-1]``, columns through ``keep[l]``; b: through
+    ``keep[l]``; the input and output layers are never remapped) so
+    ``wire.apply_payloads`` / ``wire.decode`` work against the full
+    params.  Values are untouched and every expanded leaf becomes a coo
+    scatter, so the accumulation stays client-ordered — exactly what
+    the fused path's on-device ``strategy.scbf_sum_step`` mirrors.
+    ``nbytes`` keeps the *shipped* (effective) size: expansion is
+    server-side bookkeeping, not wire traffic.
+    """
+    is_lp = lambda x: isinstance(x, wire.LayerPayload)  # noqa: E731
+    out = []
+    last = len(params) - 1
+    for p in payloads:
+        layers = jax.tree_util.tree_unflatten(p.treedef, p.layers)
+        expanded = []
+        for l, layer in enumerate(layers):
+            keep_in = keep[l - 1] if l > 0 else None
+            keep_out = keep[l] if l < last else None
+            new = {}
+            for kk, lp in layer.items():
+                full_shape = tuple(np.shape(params[l][kk]))
+                idx = lp.flat_indices()
+                if kk == "w":
+                    r, c = idx // lp.shape[1], idx % lp.shape[1]
+                    if keep_in is not None:
+                        r = keep_in[r]
+                    if keep_out is not None:
+                        c = keep_out[c]
+                    fidx = r * full_shape[1] + c
+                else:
+                    fidx = keep_out[idx] if keep_out is not None else idx
+                new[kk] = wire.LayerPayload(
+                    "coo", full_shape, lp.dtype, lp.nnz, lp.nbytes,
+                    idx=np.asarray(fidx, np.int32), bitmap=None,
+                    values=lp.values)
+            expanded.append(new)
+        flat, treedef = jax.tree_util.tree_flatten(tuple(expanded),
+                                                   is_leaf=is_lp)
+        out.append(wire.Payload(treedef, tuple(flat)))
+    return out
+
+
+class Pruner:
+    """SCBFwP pruning state for one federated run (both driver loops).
+
+    Owns the keep bookkeeping (original-geometry indices), the per-loop
+    step (APoZ → budget → removal), and — in mask mode — the device
+    keep-masks plus the optional one-shot physical compaction once the
+    cumulative budget is exhausted.  Effective sizes are always
+    reported from the keep sets, so records read identically whether a
+    neuron is masked or physically gone.
+    """
+
+    def __init__(self, params, x_val, *, prune_rate: float,
+                 prune_total: float, impl: str = "reshape",
+                 compact: bool = True):
+        if impl not in ("reshape", "mask"):
+            raise ValueError(f"unknown prune_impl {impl!r}; "
+                             "one of ('reshape', 'mask')")
+        self.impl = impl
+        self.compact_enabled = compact
+        self.prune_rate = prune_rate
+        self.prune_total = prune_total
+        self.x_val = x_val
+        self._full_hidden = hidden_sizes(params)
+        self.original_hidden = sum(self._full_hidden)
+        self.limit = int(prune_total * self.original_hidden)
+        # kept neuron ids per hidden layer, in ORIGINAL geometry
+        self.keep: List[np.ndarray] = [np.arange(h)
+                                       for h in self._full_hidden]
+        self.masks: Optional[Tuple[jnp.ndarray, ...]] = None
+        if impl == "mask":
+            self.masks = tuple(jnp.ones((h,), jnp.float32)
+                               for h in self._full_hidden)
+        self.compacted = False
+        self._stalled = False
+
+    @property
+    def mask_mode(self) -> bool:
+        return self.impl == "mask"
+
+    @property
+    def pruned_so_far(self) -> int:
+        return self.original_hidden - sum(len(k) for k in self.keep)
+
+    @property
+    def active(self) -> bool:
+        """More pruning steps to come — i.e. the cumulative budget is
+        not exhausted AND the next step can actually remove something.
+
+        A step can be a guaranteed no-op two ways: the per-step budget
+        truncates to zero (``int(θ · remaining)`` with a small
+        remainder) or the never-empty-a-layer cap stalled the previous
+        step (``_stalled``).  Both are permanent — remaining only
+        shrinks through pruning — so treating them as "done" here is
+        what lets the fused driver return to full S-round chunks and
+        ``should_compact`` fire instead of looping single-round chunks
+        (and APoZ sweeps) forever.
+        """
+        if self._stalled or self.pruned_so_far >= self.limit:
+            return False
+        return _step_budget(self.prune_rate, self.pruned_so_far,
+                            self.original_hidden, self.prune_total) > 0
+
+    def hidden_sizes(self) -> Tuple[int, ...]:
+        """Effective (kept) hidden sizes — what the records report."""
+        return tuple(len(k) for k in self.keep)
+
+    def effective_param_count(self, params) -> int:
+        """Parameters of the effective model (masked or compacted)."""
+        sizes = ([int(params[0]["w"].shape[0])]
+                 + [len(k) for k in self.keep]
+                 + [int(params[-1]["w"].shape[1])])
+        return sum(a * b + b for a, b in zip(sizes[:-1], sizes[1:]))
+
+    @property
+    def emission_keep(self) -> Optional[List[np.ndarray]]:
+        """Keep sets for wire emission, or None when shapes are already
+        physical.  Mask-mode payloads/stats are sliced to this geometry
+        so byte accounting matches what a compacted model would ship.
+        """
+        if self.mask_mode and not self.compacted:
+            return self.keep
+        return None
+
+    def _keep_bool(self) -> List[np.ndarray]:
+        out = []
+        for h, k in zip(self._full_hidden, self.keep):
+            m = np.zeros(h, bool)
+            m[k] = True
+            out.append(m)
+        return out
+
+    def step(self, params):
+        """One pruning step on the post-aggregation server params.
+
+        Returns the params to continue with: reshape mode returns the
+        compacted pytree (caller must adopt it); mask mode returns
+        ``params`` unchanged and updates ``self.masks`` in place.
+        """
+        if not self.active:
+            return params
+        before = self.pruned_so_far
+        if self.mask_mode:
+            apoz = apoz_scores(params, self.x_val,
+                               neuron_masks=self.masks)
+            new_keep = update_keep_masks(apoz, self._keep_bool(),
+                                         self.prune_rate, self.prune_total)
+            self.keep = [np.where(m)[0] for m in new_keep]
+            self.masks = tuple(jnp.asarray(m.astype(np.float32))
+                               for m in new_keep)
+            if self.pruned_so_far == before:
+                self._stalled = True      # never-empty cap: no progress
+            return params
+        apoz = apoz_scores(params, self.x_val)
+        keep_local = plan_prune(apoz, self.prune_rate, self.pruned_so_far,
+                                self.original_hidden, self.prune_total)
+        # map compacted-geometry indices back to original neuron ids
+        self.keep = [k_glob[k_loc]
+                     for k_glob, k_loc in zip(self.keep, keep_local)]
+        if self.pruned_so_far == before:
+            self._stalled = True          # never-empty cap: no progress
+            return params                 # identity slice: skip it
+        return apply_structure(params, keep_local)
+
+    @property
+    def should_compact(self) -> bool:
+        """Mask mode only: pruning is finished, something was pruned,
+        and the one-shot physical compaction has not happened yet."""
+        return (self.mask_mode and self.compact_enabled and not self.active
+                and not self.compacted and self.pruned_so_far > 0)
+
+    def compact(self, params):
+        """One-shot physical compaction of a fully-pruned masked model.
+
+        Slices the frozen-but-still-resident pruned coordinates out so
+        the remaining loops run (and ship) the physically smaller model
+        — one extra compile, after which ``masks`` is None and every
+        path behaves exactly as an unpruned model of the new geometry.
+        """
+        params = apply_structure(params, self.keep)
+        self.masks = None
+        self.compacted = True
+        return params

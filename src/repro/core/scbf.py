@@ -22,13 +22,19 @@ per-loop device sync), differential privacy on the upload path
 records with the communication accounting used by EXPERIMENTS.md
 (§Paper-validation) and benchmarks/fig2.
 
-With ``FedConfig.fuse_rounds = S > 1`` (sync mode, no pruning, batched
-engine) the driver switches to the **fused round loop** (``_run_fused``):
-S rounds are pre-planned into one static device program — train →
-delta → select → DP → on-device aggregation inside a single
-``lax.scan`` — and the trajectory stays bit-identical to the per-round
-path while evaluation coarsens to chunk boundaries
-(docs/FED_ENGINE.md §Fused round loop).
+With ``FedConfig.fuse_rounds = S > 1`` (sync mode, batched engine) the
+driver switches to the **fused round loop** (``_run_fused``): S rounds
+are pre-planned into one static device program — train → delta →
+select → DP → on-device aggregation inside a single ``lax.scan`` — and
+the trajectory stays bit-identical to the per-round path while
+evaluation coarsens to chunk boundaries (docs/FED_ENGINE.md §Fused
+round loop).  SCBFwP runs fused too when
+``ScbfConfig.prune_impl = "mask"``: pruning becomes a static-shape
+keep-mask (repro.core.pruning.Pruner) so geometry stays run-constant —
+per-prune-epoch chunk splits, on-device APoZ at chunk boundaries, an
+optional one-shot compaction when the budget is exhausted, and <= 2
+fused compiles per run (docs/FED_ENGINE.md §Pruning on the fused
+path).  Reshape-mode pruning keeps the per-round path.
 """
 from __future__ import annotations
 
@@ -103,11 +109,11 @@ class RunResult:
 _mlp_forward_jit = jax.jit(mlp_forward)
 
 
-def _evaluate(params, x, y, batch: int = 8192):
+def _evaluate(params, x, y, batch: int = 8192, neuron_masks=None):
     scores = []
     for s in range(0, x.shape[0], batch):
         scores.append(np.asarray(_mlp_forward_jit(
-            tuple(params), jnp.asarray(x[s:s + batch]))))
+            tuple(params), jnp.asarray(x[s:s + batch]), neuron_masks)))
     sc = jnp.asarray(np.concatenate(scores))
     yy = jnp.asarray(y)
     return float(auc_roc(sc, yy)), float(auc_pr(sc, yy))
@@ -193,7 +199,9 @@ def run_federated(cohort: MedicalCohort,
     runs whole chunks of sync rounds as one device program with
     on-device aggregation (bit-identical trajectory; evaluation at
     chunk boundaries only), falling back to the per-round loop for
-    pruning, fedbuff, or the sequential engine.  Rounds where every
+    reshape-mode pruning, fedbuff, or the sequential engine —
+    mask-mode pruning (``scbf.prune_impl="mask"``) runs fused
+    first-class.  Rounds where every
     sampled client drops out are skipped cleanly (no P=0 dispatch).
     Ragged cohorts (Dirichlet) batch differently —
     the padded engine runs ``n_max // B`` masked batches per epoch
@@ -217,13 +225,23 @@ def run_federated(cohort: MedicalCohort,
                          "upload path; method='fedavg' ships full weights "
                          "with no DP mechanism — refusing to run with a "
                          "privacy guarantee silently off")
+    if cfg.prune and cfg.prune_impl not in ("reshape", "mask"):
+        raise ValueError(f"unknown prune_impl {cfg.prune_impl!r}; "
+                         "one of ('reshape', 'mask')")
+    mask_prune = cfg.prune and cfg.prune_impl == "mask"
+    if mask_prune and method != "scbf":
+        raise ValueError("prune_impl='mask' threads neuron keep-masks "
+                         "through the sparse scbf pipeline; "
+                         "method='fedavg' (FAwP) prunes by reshaping — "
+                         "use prune_impl='reshape'")
     if fed.mode == "fedbuff":
         if method != "scbf":
             raise ValueError("fedbuff buffers sparse scbf uploads; "
                              "method must be 'scbf'")
-        if cfg.prune:
-            raise ValueError("pruning changes shapes under in-flight "
-                             "clients; unsupported in fedbuff mode")
+        if cfg.prune and not mask_prune:
+            raise ValueError("reshape pruning changes shapes under "
+                             "in-flight clients; fedbuff needs "
+                             "prune_impl='mask' (run-constant geometry)")
 
     feats = mlp_features or (cohort.num_features, 256, 64, 1)
     key = jax.random.PRNGKey(train_cfg.seed)
@@ -274,8 +292,15 @@ def run_federated(cohort: MedicalCohort,
     # (The amplified curve instead composes over rounds — every round is
     # one inclusion trial for every client.)
     dp_releases = np.zeros(cfg.num_clients, dtype=np.int64)
-    original_hidden = sum(f for f in feats[1:-1])
-    pruned_so_far = 0
+    pruner = None
+    if cfg.prune:
+        # fedbuff keeps full-geometry stale snapshots alive for its
+        # in-flight clients, so the one-shot mask-mode compaction must
+        # stay off there (mixed geometries could never stack)
+        pruner = pruning.Pruner(
+            params, cohort.x_val, prune_rate=cfg.prune_rate,
+            prune_total=cfg.prune_total, impl=cfg.prune_impl,
+            compact=cfg.prune_compact and fed.mode != "fedbuff")
     result = RunResult(method=method + ("wp" if cfg.prune else ""),
                        dp_delta=cfg.dp_delta if dp_on else None)
 
@@ -301,17 +326,21 @@ def run_federated(cohort: MedicalCohort,
     init_params = params
     known = {"roc": None, "pr": None}
 
-    def _metrics(params_now, do_eval: bool):
+    def _metrics(params_now, do_eval: bool, nmasks=None):
         """(auc_roc, auc_pr, evaluated) — last-known when not evaluating.
 
-        Before any evaluation has happened the last-known model is the
-        initial one, scored lazily so the default config (eval_every=1,
-        unfused) never pays for it.
+        ``nmasks`` evaluates the masked model (mask-mode SCBFwP): the
+        pruned-and-masked network is the model the run is training, so
+        it is the one the records must score.  Before any evaluation
+        has happened the last-known model is the initial one, scored
+        lazily so the default config (eval_every=1, unfused) never pays
+        for it.
         """
         if do_eval:
             known["roc"], known["pr"] = _evaluate(params_now,
                                                   cohort.x_test,
-                                                  cohort.y_test)
+                                                  cohort.y_test,
+                                                  neuron_masks=nmasks)
             return known["roc"], known["pr"], True
         if known["roc"] is None:
             known["roc"], known["pr"] = _evaluate(init_params,
@@ -322,14 +351,17 @@ def run_federated(cohort: MedicalCohort,
     if int(fed.fuse_rounds) < 1:
         raise ValueError(f"fuse_rounds must be >= 1, got {fed.fuse_rounds}")
     # the fused path needs: sync planning (fedbuff wants per-round server
-    # feedback), static shapes (pruning reshapes mid-run), and the
-    # batched engine (there is no sequential program to fuse) — anything
-    # else falls back to the per-round loop below
+    # feedback), static shapes (reshape pruning changes them mid-run;
+    # MASK pruning keeps geometry run-constant and fuses first-class),
+    # and the batched engine (there is no sequential program to fuse) —
+    # anything else falls back to the per-round loop below
     use_fused = (int(fed.fuse_rounds) > 1 and fed.mode == "sync"
-                 and not cfg.prune and eng.name == "batched")
+                 and (not cfg.prune or mask_prune)
+                 and eng.name == "batched")
     if use_fused:
         _run_fused(cohort, train_cfg, method, eng, scheduler, state, key,
-                   lrs, dp_releases, result, _epsilons, _metrics, verbose)
+                   lrs, dp_releases, result, _epsilons, _metrics, verbose,
+                   pruner)
         return result
 
     for loop in range(train_cfg.global_loops):
@@ -350,12 +382,22 @@ def run_federated(cohort: MedicalCohort,
             else:
                 params_for = state.params
             if method == "scbf":
+                nmasks = pruner.masks if pruner is not None else None
+                keep_eff = pruner.emission_keep if pruner is not None \
+                    else None
                 payloads, stats = eng.scbf_round(
-                    params_for, part, lr, ckeys, skeys, dp_keys, cfg)
+                    params_for, part, lr, ckeys, skeys, dp_keys, cfg,
+                    nmasks=nmasks, keep=keep_eff)
                 dp_releases[np.asarray(part)] += 1
+                # mask mode ships effective-geometry payloads; the
+                # server stores full geometry, so aggregation applies
+                # the expanded (index-remapped) view
+                agg_payloads = payloads if keep_eff is None else \
+                    pruning.expand_payloads(payloads, keep_eff,
+                                            state.params)
                 contrib = RoundContribution(
                     num_examples=eng.counts[np.asarray(part)],
-                    staleness=plan.staleness, payloads=payloads)
+                    staleness=plan.staleness, payloads=agg_payloads)
             else:
                 client_params, counts = eng.fedavg_round(params_for, part,
                                                          lr, ckeys)
@@ -387,30 +429,38 @@ def run_federated(cohort: MedicalCohort,
             sparse_bytes = dense_bytes
 
         # ---- pruning (SCBFwP / FAwP) ----
-        if cfg.prune and pruned_so_far < int(cfg.prune_total * original_hidden):
-            apoz = pruning.apoz_scores(params, cohort.x_val)
-            keep = pruning.plan_prune(apoz, cfg.prune_rate, pruned_so_far,
-                                      original_hidden, cfg.prune_total)
-            new_params = pruning.apply_structure(params, keep)
-            pruned_so_far = original_hidden - sum(
-                pruning.hidden_sizes(new_params))
-            params = new_params
+        if pruner is not None and pruner.active:
+            # reshape: returns the compacted pytree; mask: updates the
+            # keep-masks in place and returns params unchanged
+            params = pruner.step(params)
+            state = dataclasses.replace(state, params=params)
+        if pruner is not None and pruner.should_compact:
+            # mask mode, budget exhausted: one-shot physical compaction
+            params = pruner.compact(params)
             state = dataclasses.replace(state, params=params)
 
         wall = time.perf_counter() - t0
         roc, pr, evaluated = _metrics(
             params, _should_eval(loop, train_cfg.global_loops,
-                                 train_cfg.eval_every))
+                                 train_cfg.eval_every),
+            pruner.masks if pruner is not None else None)
         eps, eps_un = _epsilons(loop)
-        n_params = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
-                       for l in params)
+        if pruner is not None:
+            # effective model: identical whether neurons are masked,
+            # compacted, or (reshape mode) physically gone
+            n_params = pruner.effective_param_count(params)
+            hidden = pruner.hidden_sizes()
+        else:
+            n_params = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
+                           for l in params)
+            hidden = tuple(pruning.hidden_sizes(params))
         rec = LoopRecord(
             loop=loop, auc_roc=roc, auc_pr=pr,
             upload_fraction=up_frac,
             sparse_bytes=sparse_bytes, dense_bytes=dense_bytes,
             wall_time=wall,
             flops_proxy=float(n_params) * cohort.x_train.shape[0],
-            hidden_sizes=tuple(pruning.hidden_sizes(params)),
+            hidden_sizes=hidden,
             num_participants=P,
             epsilon=eps, evaluated=evaluated, epsilon_unamplified=eps_un)
         result.records.append(rec)
@@ -426,7 +476,7 @@ def run_federated(cohort: MedicalCohort,
 def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                eng, scheduler, state, key, lrs: np.ndarray,
                dp_releases: np.ndarray, result: RunResult,
-               _epsilons, _metrics, verbose: bool) -> None:
+               _epsilons, _metrics, verbose: bool, pruner=None) -> None:
     """The fused round loop: S sync rounds per device program.
 
     Each chunk is pre-planned into static (S, B) participant/validity
@@ -439,16 +489,38 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
     the returned (S, B) masked deltas, so per-round upload accounting is
     byte-identical to the per-round path.  Evaluation coarsens to chunk
     boundaries (docs/FED_ENGINE.md §Fused round loop).
+
+    SCBFwP (``pruner``, always mask-mode here): geometry stays
+    run-constant, the keep-mask tuple rides into each chunk as a plain
+    input, and chunks shrink to single rounds while pruning is still
+    removing neurons (``fused_chunk_len``) so the APoZ → mask update at
+    each chunk boundary lands at exactly the per-round cadence — the
+    keep-mask trajectory is the per-round loop's by construction.
+    Prune-phase chunks plan at horizon 1 (a degenerate one-round scan,
+    still on-device aggregation and zero host crossings) rather than
+    padding to S — one extra compiled program instead of S-1 garbage
+    rounds per prune epoch — and the post-pruning phase pads to the
+    run-constant (S, B) horizon as usual, so a whole SCBFwP run costs
+    at most two fused compiles: the horizon-1 masked program and the
+    horizon-S program (post-compaction geometry when ``prune_compact``,
+    masked full geometry otherwise).
     """
+    from repro.fed.cohort import fused_chunk_len
+
     cfg: ScbfConfig = train_cfg.scbf
     fed = train_cfg.fed
     S = int(fed.fuse_rounds)
     B = eng.fused_num_slots(scheduler.max_participants)
     total_loops = train_cfg.global_loops
-    # no pruning on the fused path: model geometry is run-constant
-    n_params = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
-                   for l in state.params)
-    hidden = tuple(pruning.hidden_sizes(state.params))
+
+    def _model_stats():
+        """(n_params, hidden_sizes) of the current effective model."""
+        if pruner is not None:
+            return (pruner.effective_param_count(state.params),
+                    pruner.hidden_sizes())
+        n = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
+                for l in state.params)
+        return n, tuple(pruning.hidden_sizes(state.params))
 
     if min(S, total_loops) > 1:
         # the first chunk's non-boundary records will need last-known
@@ -456,12 +528,14 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
         # it NOW, before the chunk call donates the initial params'
         # buffers on backends that support donation (a lazy evaluation
         # afterwards would read deleted arrays)
-        _metrics(state.params, True)
+        _metrics(state.params, True,
+                 pruner.masks if pruner is not None else None)
 
     loop0 = 0
     while loop0 < total_loops:
         t0 = time.perf_counter()
-        chunk = min(S, total_loops - loop0)
+        prune_active = pruner is not None and pruner.active
+        chunk = fused_chunk_len(total_loops - loop0, S, prune_active)
         plans = scheduler.plan_horizon(loop0, chunk, state.version)
         parts, cks, sks, dks, wts = [], [], [], [], []
         for plan in plans:
@@ -484,20 +558,31 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                     wts.append(np.zeros(0, np.float32))
         fplan = eng.prepare_fused_plan(
             parts, lrs[loop0:loop0 + chunk], cks, sks, dks,
-            horizon=S, num_slots=B,
+            horizon=1 if prune_active else S, num_slots=B,
             weights=wts if method == "fedavg" else None)
         if method == "scbf":
             new_params, masked_s, masks_s = eng.fused_scbf_chunk(
-                state.params, fplan, cfg)
-            emitted = eng.emit_fused_payloads(masked_s, masks_s, fplan)
+                state.params, fplan, cfg,
+                nmasks=pruner.masks if pruner is not None else None)
+            emitted = eng.emit_fused_payloads(
+                masked_s, masks_s, fplan,
+                keep=pruner.emission_keep if pruner is not None else None)
         else:
             new_params = eng.fused_fedavg_chunk(state.params, fplan)
             emitted = [([], [])] * chunk
         applied = sum(1 for p in plans if p.num_participants)
         state = dataclasses.replace(state, params=new_params,
                                     version=state.version + applied)
+        if prune_active:
+            # chunk boundary == per-round cadence while pruning (chunks
+            # are 1 round long): APoZ on device, mask update on host
+            pruner.step(state.params)
+            if pruner.should_compact:
+                state = dataclasses.replace(
+                    state, params=pruner.compact(state.params))
         wall_each = (time.perf_counter() - t0) / chunk
 
+        n_params, hidden = _model_stats()
         for r, plan in enumerate(plans):
             loop = loop0 + r
             P = plan.num_participants
@@ -518,7 +603,9 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                 sparse_bytes = dense_bytes
             do_eval = (r == chunk - 1) and _should_eval(
                 loop, total_loops, train_cfg.eval_every)
-            roc, pr, evaluated = _metrics(state.params, do_eval)
+            roc, pr, evaluated = _metrics(
+                state.params, do_eval,
+                pruner.masks if pruner is not None else None)
             eps, eps_un = _epsilons(loop)
             rec = LoopRecord(
                 loop=loop, auc_roc=roc, auc_pr=pr,

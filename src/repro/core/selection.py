@@ -54,18 +54,28 @@ class UploadStats:
 def select_gradients(grads: Sequence[dict], upload_rate: float,
                      selection: str = "positive",
                      key: jax.Array | None = None,
-                     score_norm: bool = False
+                     score_norm: bool = False,
+                     neuron_masks=None
                      ) -> Tuple[list, list, jnp.ndarray]:
     """The paper's channel-selection pipeline for MLP gradients.
 
     positive: upload channels with norm above the (1-α)-quantile (top α).
     negative: discard channels below the α-quantile (upload the top 1-α).
 
+    ``neuron_masks`` (mask-mode SCBFwP): per-hidden-layer keep-masks.
+    Pruned neurons score ``-inf`` (channels.layer_scores), the quantile
+    ranks the effective channel population only, and the edge rule can
+    never select an edge through a pruned neuron — all at static shape,
+    so the selection of a masked-pruned model matches a
+    physically-compacted one.
+
     Returns (masked_grads, masks, threshold).
     """
-    scores = channels.layer_scores(grads, normalize=score_norm)
+    scores = channels.layer_scores(grads, normalize=score_norm,
+                                   neuron_masks=neuron_masks)
     thr = channels.channel_quantile(scores, upload_rate,
-                                    selection=selection, key=key)
+                                    selection=selection, key=key,
+                                    masked=neuron_masks is not None)
     masked, masks = channels.apply_channel_mask(grads, scores, thr)
     return masked, masks, thr
 

@@ -128,6 +128,28 @@ def horizon_slot_plan(participants: Sequence[np.ndarray], num_slots: int,
     return part_idx, valid
 
 
+def fused_chunk_len(loops_left: int, fuse_rounds: int,
+                    prune_active: bool) -> int:
+    """Rounds in the next fused chunk (per-prune-epoch chunk splits).
+
+    While SCBFwP pruning is still removing neurons the keep-mask
+    changes after *every* round, and a fused chunk's mask is a
+    run-constant input — so the driver plans single-round chunks until
+    the cumulative budget is exhausted, then full ``fuse_rounds``
+    chunks.  Prune-phase chunks plan at horizon 1 (their own compiled
+    program — a degenerate one-round scan) instead of padding to the
+    ``(S, B)`` horizon, trading one extra compile for not executing
+    S-1 masked-out garbage rounds per prune epoch; post-pruning chunks
+    pad to the run-constant horizon as usual, so the whole run stays
+    at <= 2 fused compiles.
+    """
+    if loops_left < 1:
+        raise ValueError(f"no loops left to chunk ({loops_left})")
+    if prune_active:
+        return 1
+    return min(int(fuse_rounds), loops_left)
+
+
 def pad_clients(clients: Sequence[Tuple[np.ndarray, np.ndarray]]
                 ) -> PaddedCohort:
     """Stack ragged client shards into a rectangular padded cohort."""

@@ -90,7 +90,7 @@ def _reveal_masks(masked, masks):
                  for layer_delta, layer_masks in zip(masked, masks))
 
 
-def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, *, batch_size: int,
+def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nm, *, batch_size: int,
                epochs: int, masked_loss: bool, upload_rate: float,
                selection_mode: str, score_norm: bool, dp_noise: float,
                dp_clip: float):
@@ -100,18 +100,23 @@ def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, *, batch_size: int,
     chunk scan — sharing it is what keeps the two paths bit-identical.
     ``v`` is the slot-validity bit: padded slots compute garbage that is
     zeroed here (``jnp.where(True, x, 0)`` is ``x`` bitwise, so real
-    slots are untouched).
+    slots are untouched).  ``nm`` is the optional SCBFwP neuron
+    keep-mask tuple (mask-mode pruning): pruned neurons drop out of
+    training, selection and DP at static shape; ``None`` traces the
+    original unmasked program.
     """
     if masked_loss:
         new_p = masked_local_train_impl(p, x, y, w, lr, ck,
                                         batch_size=batch_size,
-                                        epochs=epochs)
+                                        epochs=epochs, neuron_masks=nm)
     else:
         new_p = local_train_impl(p, x, y, lr, ck,
-                                 batch_size=batch_size, epochs=epochs)
+                                 batch_size=batch_size, epochs=epochs,
+                                 neuron_masks=nm)
     g = client_delta(p, new_p)
     masked, masks, _ = sel.select_gradients(
-        g, upload_rate, selection_mode, key=sk, score_norm=score_norm)
+        g, upload_rate, selection_mode, key=sk, score_norm=score_norm,
+        neuron_masks=nm)
     if dp_noise > 0.0:
         masked = privacy.gaussian_mechanism(
             tuple(masked), dk, dp_noise, dp_clip,
@@ -127,7 +132,8 @@ def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, *, batch_size: int,
                                    "stacked_params", "upload_rate",
                                    "selection_mode", "score_norm",
                                    "dp_noise", "dp_clip", "spmd_axis"))
-def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid, *,
+def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid,
+               nmasks=None, *,
                batch_size: int, epochs: int, masked_loss: bool,
                stacked_params: bool, upload_rate: float,
                selection_mode: str, score_norm: bool,
@@ -137,14 +143,15 @@ def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid, *,
 
     ``params`` is either one shared pytree (sync rounds) or a B-stacked
     pytree (fedbuff: each participant trains from its own stale
-    version).  ``spmd_axis`` names the mesh axis the slot dimension is
-    sharded over (None = single device).  Returns
+    version).  ``nmasks`` (mask-mode SCBFwP) is one keep-mask tuple
+    shared by every slot.  ``spmd_axis`` names the mesh axis the slot
+    dimension is sharded over (None = single device).  Returns
     (masked_deltas, masks), both B-stacked.
     """
     p_ax = 0 if stacked_params else None
 
     def one(p, x, y, w, ck, sk, dk, v):
-        return _slot_pass(p, x, y, w, lr, ck, sk, dk, v,
+        return _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nmasks,
                           batch_size=batch_size, epochs=epochs,
                           masked_loss=masked_loss, upload_rate=upload_rate,
                           selection_mode=selection_mode,
@@ -157,7 +164,8 @@ def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid, *,
 
 
 def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
-                       ckeys, skeys, dp_keys, *, batch_size: int,
+                       ckeys, skeys, dp_keys, nmasks=None, *,
+                       batch_size: int,
                        epochs: int, masked_loss: bool, upload_rate: float,
                        selection_mode: str, score_norm: bool,
                        dp_noise: float, dp_clip: float,
@@ -171,15 +179,19 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
     device, with no wire decode and no host round-trip.  All-invalid
     rounds (empty cohorts, tail-chunk padding) pass the carry through
     bitwise untouched because their deltas are zeroed by the validity
-    mask.  Returns (new_params, masked_deltas, masks) with the latter
-    two stacked ``(S, B, ...)`` for off-critical-path wire encoding.
+    mask.  ``nmasks`` (mask-mode SCBFwP) is the chunk's neuron
+    keep-mask tuple — run-constant *within* a chunk (the driver plans
+    single-round chunks while pruning is still removing neurons, so a
+    chunk never spans a mask update).  Returns
+    (new_params, masked_deltas, masks) with the latter two stacked
+    ``(S, B, ...)`` for off-critical-path wire encoding.
     """
     def round_body(p, rnd):
         idx, v, lr, ck, sk, dk = rnd
         xs, ys, ws = x_all[idx], y_all[idx], w_all[idx]
 
         def one(x, y, w, c, s, d, vv):
-            return _slot_pass(p, x, y, w, lr, c, s, d, vv,
+            return _slot_pass(p, x, y, w, lr, c, s, d, vv, nmasks,
                               batch_size=batch_size, epochs=epochs,
                               masked_loss=masked_loss,
                               upload_rate=upload_rate,
@@ -190,7 +202,8 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
         masked, masks = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0),
                                  spmd_axis_name=spmd_axis)(
             xs, ys, ws, ck, sk, dk, v)
-        return scbf_sum_step(p, masked), (masked, masks)
+        return scbf_sum_step(p, masked, neuron_masks=nmasks), \
+            (masked, masks)
 
     new_p, (masked_s, masks_s) = jax.lax.scan(
         round_body, tuple(params),
@@ -279,22 +292,60 @@ def _fedavg_pass(params, xs, ys, ws, lr, ckeys, *,
                     spmd_axis_name=spmd_axis)(params, xs, ys, ws, ckeys)
 
 
-def _encode_slot(masked_host, masks_host, sl):
+def _compact_layers(layers, keep):
+    """Host-side effective-geometry slicing of one slot's layer dicts.
+
+    Mask-mode SCBFwP emission: ``keep[l]`` are the kept neuron ids of
+    hidden layer l, and the sliced arrays are exactly what
+    ``pruning.apply_structure`` would have produced — so wire encoding
+    (bytes, bitmap sizes, dense reference) and mask accounting see the
+    *effective* model, matching what a physically-compacted run ships.
+    ``None`` leaves (bias-free masks) pass through.
+    """
+    out = []
+    prev = None
+    last = len(layers) - 1
+    for l, layer in enumerate(layers):
+        new = {}
+        for kk, vv in layer.items():
+            if vv is None:
+                new[kk] = None
+                continue
+            a = np.asarray(vv)
+            if kk == "w":
+                if prev is not None:
+                    a = a[prev]
+                if l < last:
+                    a = a[:, keep[l]]
+            elif l < last:
+                a = a[keep[l]]
+            new[kk] = a
+        if l < last:
+            prev = keep[l]
+        out.append(new)
+    return tuple(out)
+
+
+def _encode_slot(masked_host, masks_host, sl, keep=None):
     """Wire-encode one slot of a host-side stacked pass output.
 
     ``sl`` indexes the stacked leading axes — ``(i,)`` for a per-round
     pass, ``(r, i)`` for a fused chunk — so both paths share the exact
     same encode + accounting code (``repro.comm.wire`` stays the single
-    source of truth for upload bytes).
+    source of truth for upload bytes).  ``keep`` (mask-mode SCBFwP)
+    compacts the slot to its effective geometry before encoding.
     """
     mg = tuple({kk: vv[sl] for kk, vv in layer.items()}
                for layer in masked_host)
-    mk = [{kk: (None if vv is None else vv[sl])
-           for kk, vv in layer.items()} for layer in masks_host]
+    mk = tuple({kk: (None if vv is None else vv[sl])
+                for kk, vv in layer.items()} for layer in masks_host)
+    if keep is not None:
+        mg = _compact_layers(mg, keep)
+        mk = _compact_layers(mk, keep)
     return wire.encode(mg), sel.UploadStats.from_masks(mk)
 
 
-def _emit_payloads(masked_stacked, masks_stacked, num: int
+def _emit_payloads(masked_stacked, masks_stacked, num: int, keep=None
                    ) -> Tuple[List[wire.Payload], List[sel.UploadStats]]:
     """One device→host transfer, then per-client wire encoding.
 
@@ -306,7 +357,7 @@ def _emit_payloads(masked_stacked, masks_stacked, num: int
     masks_host = jax.device_get(masks_stacked)
     payloads, stats = [], []
     for i in range(num):
-        payload, st = _encode_slot(masked_host, masks_host, (i,))
+        payload, st = _encode_slot(masked_host, masks_host, (i,), keep)
         payloads.append(payload)
         stats.append(st)
     return payloads, stats
@@ -378,6 +429,8 @@ class BatchedEngine:
             self._slot_sharding, self._repl_sharding = \
                 cohort_shardings(self.mesh)
             self._fused_slot_sharding, _ = fused_plan_shardings(self.mesh)
+            from repro.sharding.rules import keep_mask_sharding
+            self._mask_sharding = keep_mask_sharding(self.mesh)
         else:
             self.mesh = None
         self._cohort_replicated = False
@@ -421,12 +474,15 @@ class BatchedEngine:
         return b, out, params, valid
 
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
-                   cfg: ScbfConfig):
+                   cfg: ScbfConfig, nmasks=None, keep=None):
         """Masked sparse uploads for every participant, one batched pass.
 
         ``params``: one pytree (sync) or a list of per-participant
-        pytrees (fedbuff stale versions).  An empty round returns
-        ``([], [])`` without dispatching a P=0 program.
+        pytrees (fedbuff stale versions).  ``nmasks``/``keep`` are the
+        mask-mode SCBFwP neuron keep-masks (device tuple threaded into
+        the pass) and kept-index sets (host, for effective-geometry
+        emission).  An empty round returns ``([], [])`` without
+        dispatching a P=0 program.
         """
         p_count = len(participants)
         if not p_count:
@@ -443,15 +499,17 @@ class BatchedEngine:
             p = p_stk
         elif self.mesh is not None:
             p = jax.device_put(p, self._repl_sharding)
+        if nmasks is not None and self.mesh is not None:
+            nmasks = jax.device_put(tuple(nmasks), self._mask_sharding)
         with self._mesh_ctx():
             masked, masks = _scbf_pass(
-                p, xs, ys, ws, lr, ck, sk, dk, valid,
+                p, xs, ys, ws, lr, ck, sk, dk, valid, nmasks,
                 batch_size=self.batch_size, epochs=self.epochs,
                 masked_loss=not self.cohort.uniform, stacked_params=stacked,
                 upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
                 score_norm=cfg.score_norm, dp_noise=cfg.dp_noise_multiplier,
                 dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis)
-        return _emit_payloads(masked, masks, p_count)
+        return _emit_payloads(masked, masks, p_count, keep)
 
     def fedavg_round(self, params, participants, lr, ckeys):
         """Full-weight training; returns (per-client params list, counts).
@@ -565,22 +623,28 @@ class BatchedEngine:
                          ckeys=dev["ckeys"], skeys=dev["skeys"],
                          dp_keys=dev["dp_keys"], weights=wts_dev)
 
-    def fused_scbf_chunk(self, params, plan: FusedPlan, cfg: ScbfConfig):
+    def fused_scbf_chunk(self, params, plan: FusedPlan, cfg: ScbfConfig,
+                         nmasks=None):
         """Run one fused chunk: S rounds, zero host crossings inside.
 
-        Returns (new_params, masked_deltas, masks) — the stacked
-        outputs stay on device until ``emit_fused_payloads`` pulls them
-        for wire accounting at the chunk boundary.
+        ``nmasks`` (mask-mode SCBFwP) is the chunk's neuron keep-mask
+        tuple — device arrays, replicated across a pod mesh (keep-masks
+        are model-geometry state and follow the weights-never-shard
+        contract).  Returns (new_params, masked_deltas, masks) — the
+        stacked outputs stay on device until ``emit_fused_payloads``
+        pulls them for wire accounting at the chunk boundary.
         """
         p = tuple(params)
         if self.mesh is not None:
             p = jax.device_put(p, self._repl_sharding)
+            if nmasks is not None:
+                nmasks = jax.device_put(tuple(nmasks), self._mask_sharding)
         fused_scbf, _ = _fused_programs()
         with self._mesh_ctx():
             return fused_scbf(
                 p, self.cohort.x, self.cohort.y, self.cohort.w,
                 plan.part_idx, plan.valid, plan.lrs,
-                plan.ckeys, plan.skeys, plan.dp_keys,
+                plan.ckeys, plan.skeys, plan.dp_keys, nmasks,
                 batch_size=self.batch_size, epochs=self.epochs,
                 masked_loss=not self.cohort.uniform,
                 upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
@@ -605,16 +669,20 @@ class BatchedEngine:
                 masked_loss=not self.cohort.uniform,
                 spmd_axis=self.spmd_axis)
 
-    def emit_fused_payloads(self, masked_s, masks_s, plan: FusedPlan
+    def emit_fused_payloads(self, masked_s, masks_s, plan: FusedPlan,
+                            keep=None
                             ) -> List[Tuple[List[wire.Payload],
                                             List[sel.UploadStats]]]:
         """One device→host transfer for the whole chunk, then per-round
         wire encoding off the critical path.
 
-        Returns ``[(payloads, stats), ...]`` per *real* round; padding
-        rounds and padded slots are never encoded and ship zero bytes.
-        The reconstructed payloads are byte-identical to what the
-        per-round path emits because the masked deltas are.
+        ``keep`` (mask-mode SCBFwP) compacts every slot to the
+        effective geometry before encoding, so the reported bytes are
+        what a physically-pruned model would ship.  Returns
+        ``[(payloads, stats), ...]`` per *real* round; padding rounds
+        and padded slots are never encoded and ship zero bytes.  The
+        reconstructed payloads are byte-identical to what the per-round
+        path emits because the masked deltas are.
         """
         masked_host = jax.device_get(masked_s)
         masks_host = jax.device_get(masks_s)
@@ -622,7 +690,8 @@ class BatchedEngine:
         for r in range(plan.rounds):
             payloads, stats = [], []
             for i in range(int(plan.participants[r].size)):
-                payload, st = _encode_slot(masked_host, masks_host, (r, i))
+                payload, st = _encode_slot(masked_host, masks_host,
+                                           (r, i), keep)
                 payloads.append(payload)
                 stats.append(st)
             out.append((payloads, stats))
@@ -657,7 +726,7 @@ class SequentialEngine:
         return len(self.clients)
 
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
-                   cfg: ScbfConfig):
+                   cfg: ScbfConfig, nmasks=None, keep=None):
         stacked = isinstance(params, list)
         payloads, stats = [], []
         for i, k in enumerate(participants):
@@ -665,16 +734,20 @@ class SequentialEngine:
             xc, yc = self.clients[int(k)]
             new_p = local_train(p0, xc, yc, lr, ckeys[i],
                                 batch_size=self.batch_size,
-                                epochs=self.epochs)
+                                epochs=self.epochs, neuron_masks=nmasks)
             g = client_delta(p0, new_p)
             masked, masks, _ = sel.select_gradients(
                 g, cfg.upload_rate, cfg.selection, key=skeys[i],
-                score_norm=cfg.score_norm)
+                score_norm=cfg.score_norm, neuron_masks=nmasks)
             if cfg.dp_noise_multiplier > 0.0:
                 masked = privacy.gaussian_mechanism(
                     tuple(masked), dp_keys[i], cfg.dp_noise_multiplier,
                     cfg.dp_clip_norm, masks=_reveal_masks(masked, masks))
-            payloads.append(wire.encode(tuple(masked)))
+            masked, masks = tuple(masked), tuple(masks)
+            if keep is not None:
+                masked = _compact_layers(masked, keep)
+                masks = _compact_layers(masks, keep)
+            payloads.append(wire.encode(masked))
             stats.append(sel.UploadStats.from_masks(masks))
         return payloads, stats
 

@@ -43,7 +43,7 @@ from repro.core import server
 # upload-byte accounting.
 # ---------------------------------------------------------------------------
 
-def scbf_sum_step(params, stacked_deltas):
+def scbf_sum_step(params, stacked_deltas, neuron_masks=None):
     """W ← W + Σ_b ΔW̃_b over the slot axis of a ``(B, ...)`` stack.
 
     Accumulates the deltas *delta-first in slot order* via a
@@ -54,6 +54,13 @@ def scbf_sum_step(params, stacked_deltas):
     Invalid slots arrive already zeroed by the engine's validity mask,
     and ``x + 0.0`` is a bitwise no-op, so padding (including
     fully-empty rounds) passes the carry through untouched.
+
+    ``neuron_masks`` (mask-mode SCBFwP): per-hidden-layer keep-masks.
+    Client deltas at pruned coordinates are exactly zero by
+    construction (zero gradients through the mask, channel selection
+    excludes pruned edges), and zeroing the accumulated total there
+    turns that invariant into a structural guarantee: the server's
+    pruned coordinates stay bit-frozen no matter what a client ships.
     """
     zero = jax.tree_util.tree_map(
         lambda ref: jnp.zeros(ref.shape, jnp.float32), params)
@@ -63,9 +70,32 @@ def scbf_sum_step(params, stacked_deltas):
             lambda a, d: a + d.astype(jnp.float32), acc, delta), None
 
     total, _ = jax.lax.scan(add_slot, zero, stacked_deltas)
+    if neuron_masks is not None:
+        total = _mask_total(total, neuron_masks)
     return jax.tree_util.tree_map(
         lambda p, t: (p.astype(jnp.float32) + t).astype(p.dtype),
         params, total)
+
+
+def _mask_total(total, neuron_masks):
+    """Zero a summed delta pytree at pruned coordinates.
+
+    Layer l's weight columns and bias mask by keep_l (its output
+    neurons) and its weight rows by keep_{l-1} (its input neurons);
+    the output layer masks rows only.  Kept coordinates multiply by
+    1.0 — a bitwise no-op — so the fused trajectory stays exactly the
+    per-round one.
+    """
+    out = []
+    n = len(total)
+    for l, layer in enumerate(total):
+        row = neuron_masks[l - 1][:, None] if l > 0 else 1.0
+        col = neuron_masks[l][None, :] if l < n - 1 else 1.0
+        new = {"w": layer["w"] * row * col}
+        if "b" in layer:
+            new["b"] = layer["b"] * (neuron_masks[l] if l < n - 1 else 1.0)
+        out.append(new)
+    return tuple(out)
 
 
 def fedavg_step(params, stacked_params, weights):

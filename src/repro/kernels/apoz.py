@@ -1,11 +1,21 @@
-"""APoZ accumulation kernel — zero-counting for the pruning statistic.
+"""APoZ accumulation kernel + the batched jitted APoZ scorer.
 
 APoZ(neuron j) = (1/B) Σ_b [act[b, j] == 0] over the validation set.
-This kernel counts exact zeros per column of an activation tile and
-accumulates int32 counts across the batch grid axis, fusing what the jnp
-reference does as compare -> cast -> reduce (three HBM-width passes) into
-one resident-tile pass.  Batch streams through the grid so the validation
-set never has to fit at once.
+The Pallas kernel counts exact zeros per column of an activation tile
+and accumulates int32 counts across the batch grid axis, fusing what the
+jnp reference does as compare -> cast -> reduce (three HBM-width passes)
+into one resident-tile pass.  Batch streams through the grid so the
+validation set never has to fit at once.
+
+``apoz_batch_fractions`` is the scorer the pruning subsystem actually
+calls: ONE module-level jitted program (cached per param/batch shape,
+never rebuilt per call — the per-call ``jax.jit(lambda ...)`` it
+replaces retraced on every pruning step) that runs the MLP activation
+pass and reduces each hidden layer to its per-neuron zero fraction.
+Mask-mode SCBFwP passes ``neuron_masks`` so pruned neurons read exactly
+zero (APoZ 1.0; the planner excludes them), and the fused round loop
+calls this same scorer at chunk boundaries — the whole APoZ statistic
+is computed on device.
 """
 from __future__ import annotations
 
@@ -14,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.models.mlp_net import mlp_activations
 
 DEFAULT_BB = 512
 DEFAULT_BN = 256
@@ -45,3 +57,57 @@ def apoz_counts_pallas(acts: jnp.ndarray, bb: int = DEFAULT_BB,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(acts)
+
+
+def _zero_fraction(act: jnp.ndarray) -> jnp.ndarray:
+    """Per-column exact-zero fraction of one (B, N) activation block.
+
+    Dispatches to the Pallas counting kernel when the block tiles
+    evenly (count / B equals the jnp mean exactly for any realistic
+    validation-set size, so the dispatch never changes the statistic)
+    and falls back to the jnp reduction otherwise.
+    """
+    b, n = act.shape
+    if b % DEFAULT_BB == 0 and n % DEFAULT_BN == 0:
+        return apoz_counts_pallas(act).astype(jnp.float32) / b
+    return jnp.mean(act == 0.0, axis=0)
+
+
+@jax.jit
+def apoz_batch_fractions(params, xb, neuron_masks=None):
+    """Per-hidden-layer zero fractions of one validation batch.
+
+    The module-level jitted APoZ scorer: jit's shape-keyed cache means
+    each (param-geometry, batch, mask) signature compiles exactly once
+    per process, however many pruning steps call it.  Streaming callers
+    (repro.core.pruning.apoz_scores) accumulate these per-batch
+    fractions into the full-set statistic.
+    """
+    acts = mlp_activations(params, xb, neuron_masks)
+    return [_zero_fraction(a) for a in acts]
+
+
+def apoz_scorer_compile_count() -> int:
+    """Compiled-variant count of the batched APoZ scorer (jit cache).
+
+    Same ``_cache_size`` introspection caveat as
+    ``repro.fed.engine.scbf_compile_count``: not public API, pinned to
+    the CI jax version.
+    """
+    try:
+        return int(apoz_batch_fractions._cache_size())
+    except AttributeError as e:
+        raise RuntimeError(
+            "jit cache introspection (_cache_size) is unavailable on this "
+            "jax version; compile-count assertions need the pinned "
+            "jax==0.4.37 API or an equivalent hook") from e
+
+
+def reset_apoz_scorer_compile_count() -> None:
+    try:
+        apoz_batch_fractions._clear_cache()
+    except AttributeError as e:
+        raise RuntimeError(
+            "jit cache clearing (_clear_cache) is unavailable on this "
+            "jax version; compile-count assertions need the pinned "
+            "jax==0.4.37 API or an equivalent hook") from e

@@ -59,6 +59,8 @@ def run_medical(args):
                             num_clients=args.clients, prune=prune,
                             prune_rate=args.prune_rate,
                             prune_total=args.prune_total,
+                            prune_impl=getattr(args, "prune_impl",
+                                               "reshape"),
                             dp_noise_multiplier=getattr(
                                 args, "dp_noise", 0.0)),
             fed=fed)
@@ -131,6 +133,10 @@ def main():
     ap.add_argument("--selection", default="positive")
     ap.add_argument("--prune-rate", type=float, default=0.10)
     ap.add_argument("--prune-total", type=float, default=0.47)
+    ap.add_argument("--prune-impl", default="reshape",
+                    choices=["reshape", "mask"],
+                    help="mask = static keep-masks (no recompiles, "
+                         "fused-path compatible; scbf only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/medical")
     # cross-device federation scenarios (docs/FED_ENGINE.md)

@@ -3,10 +3,21 @@
 Params are a tuple of per-layer dicts ``{"w": (fan_in, fan_out), "b": (fan_out,)}``
 — the exact structure the SCBF channel algebra (repro.core.channels) is
 defined over.  Forward is ReLU-activated with a single logit output.
+
+``neuron_masks`` (mask-mode SCBFwP, repro.core.pruning) is an optional
+tuple of per-hidden-layer ``(H_l,)`` float keep-masks (1.0 kept /
+0.0 pruned).  Masking the post-ReLU activation realises structural
+pruning without changing any array shape: a pruned neuron's activation
+is exactly zero, so it contributes nothing forward, its incoming-weight
+and bias gradients vanish through the mask, and its outgoing-weight
+gradients vanish through the zero activation — the masked network
+computes the same function as the physically-compacted one while every
+jitted program stays shape-stable.  ``None`` traces the exact original
+(unmasked) computation.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +34,9 @@ def init_mlp(features: Sequence[int], key: jax.Array) -> Tuple[dict, ...]:
     return tuple(params)
 
 
-def mlp_forward(params: Sequence[dict], x: jnp.ndarray) -> jnp.ndarray:
+def mlp_forward(params: Sequence[dict], x: jnp.ndarray,
+                neuron_masks: Optional[Sequence[jnp.ndarray]] = None
+                ) -> jnp.ndarray:
     """Returns logits of shape (batch,) for a single-output head, else
     (batch, fan_out)."""
     h = x
@@ -31,16 +44,23 @@ def mlp_forward(params: Sequence[dict], x: jnp.ndarray) -> jnp.ndarray:
         h = h @ layer["w"] + layer["b"]
         if i < len(params) - 1:
             h = jax.nn.relu(h)
+            if neuron_masks is not None:
+                h = h * neuron_masks[i]
     return h[..., 0] if h.shape[-1] == 1 else h
 
 
-def mlp_activations(params: Sequence[dict], x: jnp.ndarray):
-    """Post-ReLU activations per hidden layer (for APoZ pruning)."""
+def mlp_activations(params: Sequence[dict], x: jnp.ndarray,
+                    neuron_masks: Optional[Sequence[jnp.ndarray]] = None):
+    """Post-ReLU (mask-applied) activations per hidden layer (for APoZ
+    pruning).  Under a keep-mask, pruned neurons read exactly zero —
+    APoZ 1.0 — and the pruning planner excludes them explicitly."""
     acts = []
     h = x
     for i, layer in enumerate(params):
         h = h @ layer["w"] + layer["b"]
         if i < len(params) - 1:
             h = jax.nn.relu(h)
+            if neuron_masks is not None:
+                h = h * neuron_masks[i]
             acts.append(h)
     return acts

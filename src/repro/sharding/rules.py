@@ -103,6 +103,19 @@ def cohort_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:
     return (NamedSharding(mesh, P("pod")), NamedSharding(mesh, P()))
 
 
+def keep_mask_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for SCBFwP neuron keep-masks: replicated, like weights.
+
+    A keep-mask is model-geometry state — one ``(H_l,)`` validity
+    vector per hidden layer, shared by every participant slot — so it
+    follows the weights-never-shard-over-pod contract: replicated
+    across the pod mesh, never split on the federated client axis.
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no 'pod' axis")
+    return NamedSharding(mesh, P())
+
+
 def fused_plan_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:
     """(round_slot_sharding, replicated) for fused ``(S, B, ...)`` plans.
 

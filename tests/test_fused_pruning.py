@@ -1,0 +1,306 @@
+"""Fused-path SCBFwP: device-resident pruning via static keep-masks.
+
+The PR-5 acceptance bars: ``fuse_rounds > 1`` with ``prune=True`` and
+``prune_impl='mask'`` runs the FUSED path (no silent per-round
+fallback) at <= 2 compiles per run, with a keep-mask trajectory, byte
+accounting and AUC identical to the per-round SCBFwP path; the masked
+fused chunk body still never touches the host (transfer_guard); the
+mask and reshape implementations remove the same neurons; and the
+refusal matrix (fedavg+mask, fedbuff+reshape) fails fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, ScbfConfig, TrainConfig
+from repro.core.scbf import run_federated
+from repro.data.medical import generate_cohort
+from repro.fed.engine import (fused_compile_count, make_engine,
+                              reset_fused_compile_count)
+from repro.models.mlp_net import init_mlp
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return generate_cohort(num_admissions=800, num_medicines=40,
+                           num_risk_medicines=15, num_interactions=4, seed=0)
+
+
+FEATS = (40, 16, 4, 1)
+
+
+def _tcfg(fuse: int, loops: int = 8, K: int = 5, batch: int = 64,
+          impl: str = "mask", compact: bool = True, prune_rate: float = 0.2,
+          prune_total: float = 0.5, eval_every: int = 1, **fed_kw):
+    return TrainConfig(
+        learning_rate=0.05, global_loops=loops, local_batch_size=batch,
+        local_epochs=1, eval_every=eval_every,
+        scbf=ScbfConfig(upload_rate=0.1, num_clients=K, prune=True,
+                        prune_rate=prune_rate, prune_total=prune_total,
+                        prune_impl=impl, prune_compact=compact),
+        fed=FedConfig(fuse_rounds=fuse, **fed_kw))
+
+
+def _params_bitwise_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# parity: the tentpole acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_fused_scbfwp_matches_per_round_mask_mode(cohort):
+    """fuse_rounds=S with mask pruning is bit-identical to the
+    per-round mask run at K=5 full participation: same keep-mask
+    trajectory (hidden_sizes per loop), same upload bytes, same ε, and
+    the same final params/AUC — and it really ran fused (post-pruning
+    loops coarsen evaluation to chunk boundaries)."""
+    a = run_federated(cohort, _tcfg(1), method="scbf", mlp_features=FEATS)
+    b = run_federated(cohort, _tcfg(4), method="scbf", mlp_features=FEATS)
+    assert a.method == b.method == "scbfwp"
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert ra.hidden_sizes == rb.hidden_sizes
+        assert ra.sparse_bytes == rb.sparse_bytes
+        assert ra.dense_bytes == rb.dense_bytes
+        assert ra.upload_fraction == rb.upload_fraction
+        assert ra.num_participants == rb.num_participants
+        assert ra.flops_proxy == rb.flops_proxy
+        assert ra.epsilon == rb.epsilon
+    # pruning actually happened, and bytes shrank with it
+    assert a.records[0].hidden_sizes != a.records[-1].hidden_sizes
+    assert a.records[-1].sparse_bytes < a.records[0].sparse_bytes
+    assert _params_bitwise_equal(a.final_params, b.final_params)
+    assert a.final.auc_roc == b.final.auc_roc
+    assert a.final.auc_pr == b.final.auc_pr
+    # no silent fallback: once pruning finished, fused chunks coarsen
+    # evaluation, so at least one non-boundary loop is un-evaluated
+    assert not all(r.evaluated for r in b.records)
+    assert all(r.evaluated for r in a.records)
+
+
+def test_fused_scbfwp_matches_per_round_with_dp(cohort):
+    """DP noise lands only on revealed (kept-geometry) coordinates;
+    the noised masked trajectories must still match bit-for-bit."""
+    def cfgs(fuse):
+        t = _tcfg(fuse, loops=6)
+        return TrainConfig(
+            learning_rate=t.learning_rate, global_loops=t.global_loops,
+            local_batch_size=t.local_batch_size, local_epochs=1,
+            scbf=ScbfConfig(upload_rate=0.1, num_clients=5, prune=True,
+                            prune_rate=0.2, prune_total=0.5,
+                            prune_impl="mask", dp_noise_multiplier=1.0,
+                            dp_clip_norm=1.0),
+            fed=FedConfig(fuse_rounds=fuse))
+    a = run_federated(cohort, cfgs(1), method="scbf", mlp_features=FEATS)
+    b = run_federated(cohort, cfgs(3), method="scbf", mlp_features=FEATS)
+    for ra, rb in zip(a.records, b.records):
+        assert ra.hidden_sizes == rb.hidden_sizes
+        assert ra.sparse_bytes == rb.sparse_bytes
+        assert ra.epsilon == rb.epsilon
+    assert all(r.epsilon is not None for r in b.records)
+    assert _params_bitwise_equal(a.final_params, b.final_params)
+
+
+def test_fused_scbfwp_varying_bucketed_p(cohort):
+    """Mask pruning composes with sampling/dropout bucketing: the
+    run-constant (S, B) plan plus run-constant geometry keep the fused
+    trajectory identical to per-round across varying P."""
+    kw = dict(loops=8, K=8, batch=32, sample_fraction=0.75,
+              dropout_rate=0.2)
+    a = run_federated(cohort, _tcfg(1, **kw), method="scbf",
+                      mlp_features=FEATS)
+    b = run_federated(cohort, _tcfg(3, **kw), method="scbf",
+                      mlp_features=FEATS)
+    ps = [r.num_participants for r in a.records]
+    assert len({p for p in ps if p}) > 1      # P actually varies
+    assert sum(r.sparse_bytes for r in a.records) > 0
+    for ra, rb in zip(a.records, b.records):
+        assert ra.hidden_sizes == rb.hidden_sizes
+        assert ra.sparse_bytes == rb.sparse_bytes
+        assert ra.num_participants == rb.num_participants
+    assert _params_bitwise_equal(a.final_params, b.final_params)
+
+
+def test_mask_and_reshape_remove_the_same_neurons(cohort):
+    """The two prune implementations are one algorithm: same per-loop
+    hidden sizes, same effective byte accounting, same AUC up to the
+    (reduction-order) float tolerance of masked-vs-compacted matmuls.
+    On this CPU backend they agree exactly."""
+    a = run_federated(cohort, _tcfg(1, impl="reshape"), method="scbf",
+                      mlp_features=FEATS)
+    m = run_federated(cohort, _tcfg(1, impl="mask"), method="scbf",
+                      mlp_features=FEATS)
+    assert [r.hidden_sizes for r in a.records] == \
+        [r.hidden_sizes for r in m.records]
+    assert [r.flops_proxy for r in a.records] == \
+        [r.flops_proxy for r in m.records]
+    assert m.final.auc_roc == pytest.approx(a.final.auc_roc, abs=1e-5)
+
+
+def test_mask_mode_without_compaction_keeps_geometry(cohort):
+    """prune_compact=False: the model stays at full geometry (masks
+    forever) — records still report effective sizes and effective
+    bytes, and the final params keep the original shapes."""
+    res = run_federated(cohort, _tcfg(3, compact=False), method="scbf",
+                        mlp_features=FEATS)
+    assert res.records[-1].hidden_sizes != (16, 4)    # effective sizes
+    assert res.records[-1].sparse_bytes < res.records[0].sparse_bytes
+    shapes = [tuple(l["w"].shape) for l in res.final_params]
+    assert shapes == [(40, 16), (16, 4), (4, 1)]      # uncompacted
+    cmp = run_federated(cohort, _tcfg(3, compact=True), method="scbf",
+                        mlp_features=FEATS)
+    cshapes = [tuple(l["w"].shape) for l in cmp.final_params]
+    h = cmp.records[-1].hidden_sizes
+    assert cshapes == [(40, h[0]), (h[0], h[1]), (h[1], 1)]
+    # same effective accounting either way
+    assert [r.hidden_sizes for r in res.records] == \
+        [r.hidden_sizes for r in cmp.records]
+    assert [r.sparse_bytes for r in res.records] == \
+        [r.sparse_bytes for r in cmp.records]
+
+
+# ---------------------------------------------------------------------------
+# compiles and the transfer guard
+# ---------------------------------------------------------------------------
+
+def test_fused_scbfwp_at_most_two_compiles(cohort):
+    """The whole SCBFwP run costs at most 2 fused compiles: the
+    horizon-1 masked program the prune phase runs on, and the
+    horizon-S program for everything after (compacted geometry when
+    prune_compact, masked full geometry otherwise)."""
+    reset_fused_compile_count()
+    res = run_federated(cohort, _tcfg(4, loops=10), method="scbf",
+                        mlp_features=FEATS)
+    assert res.records[0].hidden_sizes != res.records[-1].hidden_sizes
+    assert fused_compile_count() <= 2
+    reset_fused_compile_count()
+    run_federated(cohort, _tcfg(4, loops=10, compact=False),
+                  method="scbf", mlp_features=FEATS)
+    assert fused_compile_count() <= 2
+
+
+def _engine_fixture(K=5, n=24, d=12, seed=0, hidden=(8, 4)):
+    rng = np.random.default_rng(seed)
+    clients = [(rng.random((n, d)).astype(np.float32),
+                (rng.random(n) < 0.5).astype(np.float32))
+               for _ in range(K)]
+    params = init_mlp((d,) + hidden + (1,), jax.random.PRNGKey(1))
+    return make_engine("batched", clients, 8, 1), params
+
+
+def _round_key_rows(parts, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cks, sks, dks = [], [], []
+    for part in parts:
+        p = int(np.asarray(part).size)
+        key, kc, ks, kd = jax.random.split(key, 4)
+        if p:
+            cks.append(np.asarray(jax.random.split(kc, p)))
+            sks.append(np.asarray(jax.random.split(ks, p)))
+            dks.append(np.asarray(jax.random.split(kd, p)))
+        else:
+            empty = np.zeros((0, 2), np.uint32)
+            cks.append(empty)
+            sks.append(empty)
+            dks.append(empty)
+    return cks, sks, dks
+
+
+def test_masked_fused_chunk_runs_under_transfer_guard():
+    """The masked chunk body performs zero host transfers: keep-masks
+    ride in as device inputs placed at plan time, so a whole pruned
+    chunk dispatches and returns under transfer_guard('disallow') —
+    emission (host wire encoding) then happens outside the guard."""
+    eng, params = _engine_fixture()
+    cfg = ScbfConfig(upload_rate=0.25, num_clients=5, prune=True,
+                     prune_impl="mask")
+    nmasks = (jnp.asarray(np.array([1, 1, 0, 1, 0, 1, 1, 0], np.float32)),
+              jnp.asarray(np.array([1, 0, 1, 1], np.float32)))
+    keep = [np.array([0, 1, 3, 5, 6]), np.array([0, 2, 3])]
+    parts = [np.arange(5), np.array([0, 2, 4]),
+             np.array([], dtype=np.int64)]
+    cks, sks, dks = _round_key_rows(parts)
+    plan = eng.prepare_fused_plan(parts, [0.1, 0.1, 0.1], cks, sks, dks,
+                                  horizon=4,
+                                  num_slots=eng.fused_num_slots(5))
+    warm = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
+    eng.fused_scbf_chunk(warm, plan, cfg, nmasks=nmasks)  # compile
+    fresh = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
+    with jax.transfer_guard("disallow"):
+        new_p, masked, masks = eng.fused_scbf_chunk(fresh, plan, cfg,
+                                                    nmasks=nmasks)
+    emitted = eng.emit_fused_payloads(masked, masks, plan, keep=keep)
+    assert [len(p) for p, _ in emitted] == [5, 3, 0]
+    # emitted payloads are effective-geometry: 5 kept x 3 kept hidden
+    shapes = [lp.shape for lp in emitted[0][0][0].layers]
+    assert (5, 3) in shapes and (12, 5) in shapes and (3, 1) in shapes
+    # pruned server coordinates are bit-frozen through the whole chunk
+    for l, km in enumerate(nmasks):
+        dead = np.where(np.asarray(km) == 0)[0]
+        np.testing.assert_array_equal(
+            np.asarray(new_p[l]["w"])[:, dead],
+            np.asarray(params[l]["w"])[:, dead])
+        np.testing.assert_array_equal(
+            np.asarray(new_p[l + 1]["w"])[dead, :],
+            np.asarray(params[l + 1]["w"])[dead, :])
+
+
+# ---------------------------------------------------------------------------
+# refusal matrix / fallback boundary
+# ---------------------------------------------------------------------------
+
+def test_reshape_prune_still_falls_back_per_round(cohort):
+    """prune_impl='reshape' genuinely changes shapes, so fuse_rounds>1
+    keeps taking the per-round path (every loop evaluated)."""
+    res = run_federated(cohort, _tcfg(4, impl="reshape", loops=4),
+                        method="scbf", mlp_features=FEATS)
+    assert all(r.evaluated for r in res.records)
+
+
+def test_mask_prune_refuses_fedavg(cohort):
+    with pytest.raises(ValueError, match="mask"):
+        run_federated(cohort, _tcfg(1, impl="mask"), method="fedavg",
+                      mlp_features=FEATS)
+
+
+def test_unknown_prune_impl_refused(cohort):
+    with pytest.raises(ValueError, match="prune_impl"):
+        run_federated(cohort, _tcfg(1, impl="banana"), method="scbf",
+                      mlp_features=FEATS)
+
+
+def test_fedbuff_mask_prune_now_runs(cohort):
+    """The fedbuff+prune refusal is lifted where sound: mask pruning
+    keeps geometry run-constant, so stale in-flight params stack fine;
+    reshape pruning stays refused."""
+    kw = dict(loops=6, K=8, batch=32, mode="fedbuff", buffer_size=4,
+              concurrency=6)
+    res = run_federated(cohort, _tcfg(1, impl="mask", **kw),
+                        method="scbf", mlp_features=FEATS)
+    assert res.records[-1].hidden_sizes != (16, 4)    # really pruned
+    # compaction is forced off under fedbuff: geometry stays full
+    shapes = [tuple(l["w"].shape) for l in res.final_params]
+    assert shapes == [(40, 16), (16, 4), (4, 1)]
+    with pytest.raises(ValueError, match="reshape"):
+        run_federated(cohort, _tcfg(1, impl="reshape", **kw),
+                      method="scbf", mlp_features=FEATS)
+
+
+def test_sequential_engine_mask_prune_matches_batched(cohort):
+    """Mask mode is engine-agnostic: the sequential reference loop
+    prunes the same neurons and ships the same effective bytes as the
+    batched engine at K=5 full participation."""
+    a = run_federated(cohort, _tcfg(1, loops=5), method="scbf",
+                      mlp_features=FEATS)
+    s = run_federated(cohort, _tcfg(1, loops=5), method="scbf",
+                      mlp_features=FEATS, engine="sequential")
+    assert [r.hidden_sizes for r in a.records] == \
+        [r.hidden_sizes for r in s.records]
+    assert [r.sparse_bytes for r in a.records] == \
+        [r.sparse_bytes for r in s.records]

@@ -418,6 +418,8 @@ def test_bench_regression_checker_logic():
         "compile_counts": {"pow2": {"compiles": 1},
                            "exact": {"compiles": 7}},
         "fused": {"speedup": 4.0, "compile_trace": {"compiles": 1}},
+        "prune": {"speedup": 2.0, "compiles": 2,
+                  "steady": {"time_saving": 0.4}},
     }
     same = {
         "k_scaling": [{"K": 5, "speedup": 2.0},    # jitter: not gated
@@ -425,6 +427,8 @@ def test_bench_regression_checker_logic():
         "compile_counts": {"pow2": {"compiles": 1},
                            "exact": {"compiles": 7}},
         "fused": {"speedup": 3.5, "compile_trace": {"compiles": 1}},
+        "prune": {"speedup": 1.8, "compiles": 2,
+                  "steady": {"time_saving": 0.1}},   # jitter: sign-gated
     }
     assert chk.compare(same, baseline) == []
     retrace = {**same, "compile_counts": {"pow2": {"compiles": 3},
@@ -439,6 +443,24 @@ def test_bench_regression_checker_logic():
                for m in chk.compare(fused_retrace, baseline))
     missing = {k: v for k, v in same.items() if k != "fused"}
     assert any("missing" in m for m in chk.compare(missing, baseline))
+    # the fused-SCBFwP section: ratio drop, compile growth, a negative
+    # pruning time saving, and a silently-dropped section all fail
+    prune_slow = {**same, "prune": {"speedup": 1.0, "compiles": 2,
+                                    "steady": {"time_saving": 0.1}}}
+    assert any("prune" in m and "speedup" in m
+               for m in chk.compare(prune_slow, baseline))
+    prune_retrace = {**same, "prune": {"speedup": 1.8, "compiles": 3,
+                                       "steady": {"time_saving": 0.1}}}
+    assert any("prune" in m and "compiles" in m
+               for m in chk.compare(prune_retrace, baseline))
+    prune_slower_than_unpruned = {
+        **same, "prune": {"speedup": 1.8, "compiles": 2,
+                          "steady": {"time_saving": -0.05}}}
+    assert any("time saving" in m
+               for m in chk.compare(prune_slower_than_unpruned, baseline))
+    no_prune = {k: v for k, v in same.items() if k != "prune"}
+    assert any("prune" in m and "missing" in m
+               for m in chk.compare(no_prune, baseline))
     # dropping a guarded section must fail, never vacuously pass
     no_counts = {k: v for k, v in same.items() if k != "compile_counts"}
     assert any("compile_counts" in m and "missing" in m
@@ -455,3 +477,5 @@ def test_bench_regression_checker_logic():
     assert chk.compare(committed, committed) == []
     assert committed["fused"]["speedup"] >= 2.0   # the acceptance bar
     assert committed["fused"]["compile_trace"]["compiles"] <= 2
+    assert committed["prune"]["compiles"] <= 2    # the PR 5 bar
+    assert committed["prune"]["steady"]["time_saving"] > 0

@@ -5,6 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core import pruning
+from repro.kernels.apoz import (apoz_scorer_compile_count,
+                                reset_apoz_scorer_compile_count)
 from repro.models.mlp_net import init_mlp, mlp_forward, mlp_activations
 
 
@@ -15,6 +17,57 @@ def test_apoz_scores_manual():
     acts = mlp_activations(params, jnp.asarray(x))
     want = np.mean(np.asarray(acts[0]) == 0, axis=0)
     np.testing.assert_allclose(scores[0], want, atol=1e-6)
+
+
+def test_apoz_scorer_compiles_once_across_calls():
+    """The scorer used to rebuild ``jax.jit(lambda ...)`` per call, so
+    every pruning step retraced the activation pass (the PR 1
+    ``_evaluate`` defect class).  It is now one module-level jit:
+    repeated calls at the same geometry must not grow the cache."""
+    params = init_mlp((8, 6, 3, 1), jax.random.PRNGKey(0))
+    x = np.random.default_rng(0).random((96, 8)).astype(np.float32)
+    reset_apoz_scorer_compile_count()
+    first = pruning.apoz_scores(params, x, batch_size=32)
+    after_one = apoz_scorer_compile_count()
+    for _ in range(4):
+        again = pruning.apoz_scores(params, x, batch_size=32)
+    assert apoz_scorer_compile_count() == after_one
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(a, b)
+    # a genuinely new geometry is allowed its own (single) compile
+    pruning.apoz_scores(init_mlp((8, 5, 1), jax.random.PRNGKey(1)), x,
+                        batch_size=32)
+    grown = apoz_scorer_compile_count()
+    pruning.apoz_scores(init_mlp((8, 5, 1), jax.random.PRNGKey(2)), x,
+                        batch_size=32)
+    assert apoz_scorer_compile_count() == grown
+
+
+def test_apoz_scores_empty_validation_set_raises():
+    """``x_val`` with zero rows used to crash with a ``TypeError`` on
+    the unbound accumulator; it must be a clear ValueError instead."""
+    params = init_mlp((8, 4, 1), jax.random.PRNGKey(0))
+    empty = np.zeros((0, 8), np.float32)
+    with pytest.raises(ValueError, match="non-empty validation"):
+        pruning.apoz_scores(params, empty)
+
+
+def test_apoz_scores_smaller_than_one_batch():
+    """A validation set smaller than one batch (and an uneven tail)
+    must weight into the mean by true example counts."""
+    params = init_mlp((8, 4, 1), jax.random.PRNGKey(0))
+    x = np.random.default_rng(1).random((7, 8)).astype(np.float32)
+    scores = pruning.apoz_scores(params, x, batch_size=32)
+    want = np.mean(np.asarray(mlp_activations(params, jnp.asarray(x))[0])
+                   == 0, axis=0)
+    np.testing.assert_allclose(scores[0], want, atol=1e-6)
+    # uneven tail: 10 = 4 + 4 + 2
+    x10 = np.random.default_rng(2).random((10, 8)).astype(np.float32)
+    scores10 = pruning.apoz_scores(params, x10, batch_size=4)
+    want10 = np.mean(np.asarray(mlp_activations(params,
+                                                jnp.asarray(x10))[0]) == 0,
+                     axis=0)
+    np.testing.assert_allclose(scores10[0], want10, atol=1e-6)
 
 
 def test_plan_prune_budget_and_floor():
@@ -47,6 +100,135 @@ def test_apply_structure_shapes_and_forward():
     y = mlp_forward(new, x)
     assert y.shape == (5,)
     assert not bool(jnp.isnan(y).any())
+
+
+def test_plan_prune_budget_is_theta_of_remaining():
+    """The per-step budget is θ of the REMAINING neurons (paper §2.1
+    and the module docstring) — it used to be θ of the original count.
+    Pin the full cumulative trajectory: geometric decay of the step
+    size, the prune_total cap, and the stable tie rule."""
+    rng = np.random.default_rng(0)
+    apoz = [rng.random(64)]
+    removed_per_step, already = [], 0
+    for _ in range(6):
+        # plan_prune plans one step from a fresh (compacted) view;
+        # emulate the between-loop compaction by shrinking the scores
+        keep = pruning.plan_prune(apoz, prune_rate=0.25,
+                                  already_pruned=already,
+                                  original_hidden=64, prune_total=0.5)
+        removed_per_step.append(apoz[0].shape[0] - keep[0].size)
+        apoz = [apoz[0][keep[0]]]
+        already = 64 - apoz[0].shape[0]
+    # θ=0.25 of remaining (16, 12, then the prune_total cap bites: only
+    # 32 may ever go) — the old θ-of-original rule would have removed
+    # [16, 16, 0, ...] instead
+    assert removed_per_step == [16, 12, 4, 0, 0, 0]
+    assert already == 32                      # exactly prune_total * 64
+
+
+def test_plan_prune_tie_behavior_is_deterministic():
+    """Equal APoZ scores break ties stably: earliest layer, lowest
+    index first — and the never-empty-a-layer rule skips a layer that
+    is down to one neuron, spending the budget elsewhere."""
+    apoz = [np.full(3, 0.5), np.full(4, 0.5)]
+    keep = pruning.plan_prune(apoz, prune_rate=1.0, already_pruned=0,
+                              original_hidden=7, prune_total=1.0)
+    # budget 7, but each layer keeps one: layer 0 keeps its LAST
+    # neuron (0, 1 removed first by the stable order), likewise layer 1
+    assert keep[0].tolist() == [2]
+    assert keep[1].tolist() == [3]
+    # deterministic across calls
+    keep2 = pruning.plan_prune([a.copy() for a in apoz], 1.0, 0, 7, 1.0)
+    assert [k.tolist() for k in keep2] == [k.tolist() for k in keep]
+
+
+def test_update_keep_masks_matches_plan_prune_trajectory():
+    """Mask mode and reshape mode share the greedy core: for the same
+    APoZ values the masked removal trajectory equals the compacted one
+    (masked scores at pruned positions must NOT win again even though
+    their activations read APoZ 1.0)."""
+    rng = np.random.default_rng(3)
+    full = [rng.random(12), rng.random(6)]
+    # reshape-style: compact after each step
+    comp = [a.copy() for a in full]
+    keep_ids = [np.arange(12), np.arange(6)]
+    already = 0
+    for _ in range(3):
+        kl = pruning.plan_prune(comp, 0.2, already, 18, 0.6)
+        keep_ids = [g[k] for g, k in zip(keep_ids, kl)]
+        comp = [a[k] for a, k in zip(comp, kl)]
+        already = 18 - sum(a.shape[0] for a in comp)
+    # mask-style: full geometry, APoZ of pruned forced to 1.0 (as the
+    # masked activations would report) — the keep guard must ignore it
+    masks = [np.ones(12, bool), np.ones(6, bool)]
+    for _ in range(3):
+        apoz_masked = [np.where(m, a, 1.0) for a, m in zip(full, masks)]
+        masks = pruning.update_keep_masks(apoz_masked, masks, 0.2, 0.6)
+    assert [np.where(m)[0].tolist() for m in masks] == \
+        [k.tolist() for k in keep_ids]
+
+
+def test_expand_payloads_roundtrip():
+    """Effective-geometry payloads decode back to the full geometry
+    with values on the original coordinates (the server-side inverse
+    of mask-mode emission)."""
+    from repro.comm import wire
+    params = init_mlp((5, 6, 4, 1), jax.random.PRNGKey(0))
+    keep = [np.array([0, 2, 5]), np.array([1, 3])]
+    rng = np.random.default_rng(0)
+    full = tuple({"w": rng.random(p["w"].shape).astype(np.float32),
+                  "b": rng.random(p["b"].shape).astype(np.float32)}
+                 for p in params)
+    # zero the pruned coordinates (as masked training guarantees)
+    masked = pruning.apply_structure(full, keep)
+    eff_payload = wire.encode(masked)
+    (exp,) = pruning.expand_payloads([eff_payload], keep, params)
+    # wire bytes are the shipped (effective) ones
+    assert exp.nbytes == eff_payload.nbytes
+    dec = wire.decode(exp)
+    # decoded full-geometry delta compacts back to exactly the original
+    back = pruning.apply_structure(dec, keep)
+    for a, b in zip(back, masked):
+        np.testing.assert_array_equal(np.asarray(a["w"]),
+                                      np.asarray(b["w"]))
+        np.testing.assert_array_equal(np.asarray(a["b"]),
+                                      np.asarray(b["b"]))
+    # and everything off the kept coordinates decodes to exact zeros
+    dead = np.asarray(dec[0]["w"])[:, [1, 3, 4]]
+    assert not dead.any()
+
+
+def test_pruner_deactivates_when_no_progress_possible():
+    """``Pruner.active`` must go False as soon as a step can no longer
+    remove anything — zero-truncated budget or the never-empty-a-layer
+    stall — otherwise the fused driver would loop single-round chunks
+    (and APoZ sweeps) forever and compaction would never fire."""
+    x_val = np.random.default_rng(0).random((16, 4)).astype(np.float32)
+    # budget truncates to zero: int(0.1 * 8) == 0, limit 4 never reached
+    p = pruning.Pruner(init_mlp((4, 8, 1), jax.random.PRNGKey(0)), x_val,
+                       prune_rate=0.1, prune_total=0.5, impl="mask")
+    assert not p.active
+    assert not p.should_compact               # nothing was ever pruned
+    # never-empty-a-layer stall: (2, 2) hidden, limit 3, but only one
+    # neuron per layer may ever go — the second step removes nothing
+    params = init_mlp((4, 2, 2, 1), jax.random.PRNGKey(1))
+    p2 = pruning.Pruner(params, x_val, prune_rate=1.0, prune_total=0.9,
+                        impl="mask")
+    assert p2.active
+    p2.step(params)
+    assert p2.pruned_so_far == 2              # one per layer
+    assert p2.active                          # budget 1 still open
+    p2.step(params)
+    assert p2.pruned_so_far == 2              # stalled below the limit
+    assert not p2.active
+    assert p2.should_compact                  # pruning is finished
+    # reshape mode stalls identically, without an identity re-slice
+    p3 = pruning.Pruner(params, x_val, prune_rate=1.0, prune_total=0.9,
+                        impl="reshape")
+    out = p3.step(params)
+    out2 = p3.step(out)
+    assert out2 is out                        # no-op step returns as-is
+    assert not p3.active
 
 
 def test_pruning_dead_neurons_preserves_function():
