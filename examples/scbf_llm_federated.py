@@ -13,7 +13,19 @@ boundary.  Loss is logged to show learning under 10% channel upload.
 """
 import argparse
 import dataclasses
+import functools
 import time
+
+
+@functools.lru_cache(maxsize=None)
+def _fed_step(bundle, scbf, lr: float):
+    """One jitted federated step per (bundle, scbf cfg, lr) — built in
+    ``main`` the wrapper (and its compile cache) died with every call
+    (tracelint TL001)."""
+    import jax
+    from repro.core.distributed import make_federated_train_step
+    return jax.jit(make_federated_train_step(
+        lambda p, b: bundle.loss_fn(p, b), scbf, lr=lr))
 
 
 def main():
@@ -36,7 +48,6 @@ def main():
     import jax.numpy as jnp
     from repro import configs
     from repro.config import ScbfConfig
-    from repro.core.distributed import make_federated_train_step
     from repro.data.tokens import SyntheticTokenStream
     from repro.models import model_zoo
 
@@ -55,8 +66,7 @@ def main():
 
     scbf = ScbfConfig(upload_rate=args.upload_rate,
                       num_clients=args.clients)
-    step = jax.jit(make_federated_train_step(
-        lambda p, b: bundle.loss_fn(p, b), scbf, lr=args.lr))
+    step = _fed_step(bundle, scbf, args.lr)
 
     K, B, S = args.clients, args.batch, args.seq
     stream = SyntheticTokenStream(K * B, S, cfg.vocab_size, seed=1)

@@ -1,0 +1,24 @@
+"""tracelint — JAX-aware static analysis for the retrace/host-sync/
+recompile bug class.
+
+Every perf property this repo defends in CI (bit-identical fused
+rounds, <= 2 compiles per run, zero host crossings inside a chunk) was
+originally won by hand-fixing the same few bug shapes: per-call
+``jax.jit`` construction (PR 1, PR 5), shape-keyed recompiles from
+loop-varying argument shapes (PR 3), and silent device→host syncs on
+the hot path (PR 4).  This package detects those shapes at lint time:
+
+* ``astgraph``  — module parsing + the jit-reachability call graph
+  (which functions end up *inside* a traced program).
+* ``rules``     — the TL001..TL006 rule implementations.
+* ``report``    — findings, suppression comments, baseline files,
+  human/JSON rendering.
+* ``config``    — rule registry and file discovery.
+* ``tracelint`` — the CLI (``python -m repro.analysis.tracelint``).
+
+See docs/STATIC_ANALYSIS.md for the rule catalogue and workflow.
+
+Deliberately import-free: ``python -m repro.analysis.tracelint`` must
+not find the submodule pre-imported in ``sys.modules`` (runpy warns),
+and the package stays importable without jax installed.
+"""

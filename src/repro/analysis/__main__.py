@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — shorthand for the tracelint CLI."""
+import sys
+
+from repro.analysis.tracelint import main
+
+sys.exit(main())

@@ -1,0 +1,32 @@
+"""tracelint configuration: rule registry and defaults.
+
+Kept importable without jax — the linter must run in a bare CI job
+(and in pre-commit hooks) without initializing any backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence, Set
+
+from repro.analysis.rules import ALL_RULES
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+DEFAULT_BASELINE = "analysis/baseline.json"
+
+# package roots stripped when deriving dotted module names
+SOURCE_ROOTS = ("src",)
+
+
+@dataclass
+class LintConfig:
+    paths: Sequence[str] = DEFAULT_PATHS
+    baseline: str = DEFAULT_BASELINE
+    rules: Set[str] = field(default_factory=lambda: set(ALL_RULES))
+
+    def selected_rules(self):
+        unknown = self.rules - set(ALL_RULES)
+        if unknown:
+            raise ValueError(
+                f"unknown rule(s) {sorted(unknown)}; "
+                f"known: {sorted(ALL_RULES)}")
+        return {code: ALL_RULES[code] for code in sorted(self.rules)}

@@ -1,0 +1,678 @@
+"""The tracelint rules, TL001..TL006.
+
+Each rule documents the historical bug it would have caught (PR number
+and file — see docs/STATIC_ANALYSIS.md for the full catalogue) and errs
+toward *under*-reporting: heuristics only fire on the specific shapes
+that bit this repo, and every rule honors per-line suppression comments
+plus the committed baseline.  Tracer-ness is approximated by the repo's
+own calling convention, which the analyzer states explicitly:
+
+* array/tracer values arrive as **positional, unannotated** parameters;
+* static configuration arrives **keyword-only** or annotated with a
+  Python scalar type (``int``/``bool``/``str``/``float``), or is named
+  in the wrapping jit's ``static_argnames``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.astgraph import (CallGraph, FunctionInfo, ModuleInfo,
+                                     SCALAR_ANNOTATIONS, dotted_name,
+                                     is_jit_expr)
+from repro.analysis.report import Finding
+
+_HOST_SYNC_CASTS = {"float", "int", "bool"}
+_NP_MATERIALIZE = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+_DEVICE_GET = {"jax.device_get", "device_get"}
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "range",
+                 "max", "min", "abs"}
+# array methods that READ values: `x.sum()` on a tracer concretizes,
+# even though the attribute access `x.sum` alone is structural
+_VALUE_METHODS = {"sum", "max", "min", "mean", "prod", "any", "all",
+                  "item", "tolist"}
+
+
+def _enclosing(mod: ModuleInfo, graph: CallGraph,
+               node: ast.AST) -> Optional[FunctionInfo]:
+    return graph.function_at(mod, node)
+
+
+def _finding(rule: str, mod: ModuleInfo, node: ast.AST, message: str,
+             fn: Optional[FunctionInfo]) -> Finding:
+    return Finding(rule=rule, path=mod.path, line=node.lineno,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   symbol=fn.qualname if fn else "<module>")
+
+
+def _tracer_params(fn: FunctionInfo) -> Set[str]:
+    """Parameters this repo's convention marks as possibly-traced:
+    positional, unannotated-or-array-annotated, non-static."""
+    out = set()
+    for p in fn.posonly_params:
+        if p in ("self", "cls") or p in fn.static_params:
+            continue
+        if fn.annotations.get(p) in SCALAR_ANNOTATIONS:
+            continue
+        out.add(p)
+    return out
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_static_expr(node: ast.AST, tracer_names: Set[str],
+                    static_calls: Set[str] = frozenset()) -> bool:
+    """Conservatively: does this expression avoid touching a tracer
+    except through static accessors?
+
+    Static accessors — uses that read *structure*, never array values:
+    ``.shape``/``.ndim``/``.dtype``-style attributes, ``len()`` and
+    friends, ``is None`` tests, ``"key" in pytree`` membership on a
+    string constant, any other attribute access (pytrees and config
+    objects travel as positional args, and branching on a *field* of
+    one is structural), and calls to same-module shape-pure functions
+    (``static_calls``).
+    """
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in tracer_names:
+            if not _under_static_accessor(node, sub, static_calls):
+                return False
+    return True
+
+
+def _under_static_accessor(root: ast.AST, target: ast.Name,
+                           static_calls: Set[str] = frozenset()) -> bool:
+    """Is ``target`` only reached via a static accessor inside root?"""
+    class _V(ast.NodeVisitor):
+        def __init__(self):
+            self.ok = True
+
+        def visit_Attribute(self, node):
+            # any attribute read is structural: .shape/.dtype on arrays,
+            # config fields on dataclasses, dict methods on pytrees.
+            # (Reading array *values* needs a call or a subscript, both
+            # of which stay flagged.)
+            return
+
+        def visit_Call(self, node):
+            cname = dotted_name(node.func)
+            if cname in _STATIC_CALLS or cname in static_calls:
+                return
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _VALUE_METHODS:
+                # `x.max()` reads values — look through the attribute
+                # at its base (and the args) instead of exempting it
+                self.visit(node.func.value)
+                for a in node.args:
+                    self.visit(a)
+                return
+            self.generic_visit(node)
+
+        def visit_Compare(self, node):
+            # `x is None` / `x is not None` is a static (python-level)
+            # test even on a tracer-typed name
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops) and any(
+                    isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators):
+                return
+            # `"key" in p`: membership of a string constant is a
+            # structural test on a dict pytree, not a value read
+            if all(isinstance(op, (ast.In, ast.NotIn))
+                   for op in node.ops) and \
+                    isinstance(node.left, ast.Constant) and \
+                    isinstance(node.left.value, str):
+                return
+            self.generic_visit(node)
+
+        def visit_Name(self, node):
+            if node is target:
+                self.ok = False
+
+    v = _V()
+    v.visit(root)
+    return v.ok
+
+
+def _shape_only_functions(mod: ModuleInfo) -> Set[str]:
+    """Same-module functions that read their arguments only through
+    static accessors (shapes, lens, structure) — calling one on a
+    tracer is a static computation, e.g. ``num_channels(scores)``."""
+    out: Set[str] = set()
+    for fn in mod.functions.values():
+        params = {p for p in fn.posonly_params if p not in ("self", "cls")}
+        if not params:
+            continue
+        derived = set(params)
+        iter_names: Set[int] = set()
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.For) and \
+                    isinstance(node.iter, ast.Name) and \
+                    node.iter.id in derived:
+                derived |= _names_in(node.target)
+                # iterating a pytree/array unrolls over structure —
+                # shape-static, so the iter read itself is fine
+                iter_names.add(id(node.iter))
+        ok = True
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Name) and id(node) not in iter_names \
+                    and node.id in derived and \
+                    isinstance(node.ctx, ast.Load):
+                if not _under_static_accessor(fn.node, node):
+                    ok = False
+                    break
+        if ok:
+            out.add(fn.qualname)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TL001 — per-call jax.jit construction
+# ---------------------------------------------------------------------------
+
+def _assignment_is_cached(mod: ModuleInfo, call: ast.Call) -> bool:
+    """Cached-attribute wrapping: ``self._f = jax.jit(...)`` (or a dict
+    slot) guarded by an ``if ... is None`` / ``not in`` / ``hasattr``
+    style cache check is the accepted lazy-build idiom."""
+    parents = _parent_chain(mod.tree, call)
+    assigned_cache_slot = False
+    for node in parents:
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                   for t in node.targets):
+                assigned_cache_slot = True
+        if isinstance(node, ast.If) and assigned_cache_slot:
+            test_src = ast.dump(node.test)
+            if ("Is()" in test_src or "IsNot()" in test_src
+                    or "NotIn()" in test_src or "In()" in test_src
+                    or "hasattr" in test_src):
+                return True
+    return False
+
+
+def _parent_chain(tree: ast.Module, target: ast.AST) -> List[ast.AST]:
+    """Ancestors of ``target``, innermost first."""
+    chain: List[ast.AST] = []
+
+    def walk(node, ancestors):
+        if node is target:
+            chain.extend(reversed(ancestors))
+            return True
+        for child in ast.iter_child_nodes(node):
+            if walk(child, ancestors + [node]):
+                return True
+        return False
+
+    walk(tree, [])
+    return chain
+
+
+def check_tl001(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL001: ``jax.jit(...)`` constructed inside a function body.
+
+    The PR 1 bug (``scbf._evaluate`` re-wrapped ``jax.jit(mlp_forward)``
+    per evaluation) and the PR 5 bug (``apoz_scores`` built
+    ``jax.jit(lambda ...)`` per pruning step): a jit wrapper built
+    inside a re-entered function gets a fresh compilation cache every
+    call, so every call retraces and recompiles.  Module-level
+    wrappings, ``lru_cache``-decorated factories, and cache-guarded
+    attribute assignments are exempt.
+    """
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and is_jit_expr(node, mod)):
+            continue
+        fn = _enclosing(mod, graph, node)
+        if fn is None:
+            continue                          # module level: the fix
+        # partial(jax.jit, ...) *unapplied* inside a function is only
+        # a builder; flag it all the same — it is called per-call —
+        # except when it is immediately a decorator (handled as def).
+        if any(node in getattr(f.node, "decorator_list", [])
+               for f in mod.functions.values()):
+            owner = next(f for f in mod.functions.values()
+                         if node in getattr(f.node, "decorator_list", []))
+            if owner.parent is None:
+                continue                      # module-level decorated def
+            fn = graph.functions.get(f"{mod.modname}:{owner.parent}")
+        if fn is None:
+            continue
+        if fn.cached_factory:
+            continue
+        if any(graph.functions[f"{mod.modname}:{q}"].cached_factory
+               for q in _ancestor_qualnames(fn)
+               if f"{mod.modname}:{q}" in graph.functions):
+            continue
+        if _assignment_is_cached(mod, node):
+            continue
+        lam = " (on a lambda)" if node.args and \
+            isinstance(node.args[0], ast.Lambda) else ""
+        yield _finding(
+            "TL001", mod, node,
+            f"jax.jit constructed inside '{fn.qualname}'{lam}: the wrapper "
+            "(and its compilation cache) is rebuilt on every call, so "
+            "every call retraces — hoist to module level, an "
+            "@functools.lru_cache factory, or a cache-guarded attribute",
+            fn)
+
+
+def _ancestor_qualnames(fn: FunctionInfo) -> List[str]:
+    out = []
+    qual = fn.parent
+    while qual:
+        out.append(qual)
+        qual = qual.rpartition(".")[0] or None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TL002 — host sync on traced values
+# ---------------------------------------------------------------------------
+
+def check_tl002(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL002: device→host sync on a traced value.
+
+    The PR 4 bug: ``float(lr)`` on a device scalar synced the host
+    every round.  Inside in-trace functions this is a trace error or a
+    silent constant-folding hazard; on the host tier, ``float()`` of an
+    unannotated positional parameter (or of a known-jitted call) is the
+    same bug wearing a loop — it blocks dispatch on device completion.
+    """
+    static_calls = _shape_only_functions(mod)
+    for mod_fn in mod.functions.values():
+        if not mod_fn.in_trace:
+            continue
+        tracers = _tracer_params(mod_fn)
+        for node in _own_body_walk(mod, mod_fn):
+            if isinstance(node, ast.Call):
+                cname = dotted_name(node.func)
+                resolved = mod.resolve(cname) if cname else None
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    yield _finding(
+                        "TL002", mod, node,
+                        ".item() inside a traced function forces a "
+                        "device→host sync (and fails under jit) — keep "
+                        "the value on device or move the read to a "
+                        "chunk boundary", mod_fn)
+                elif resolved in _NP_MATERIALIZE or resolved in _DEVICE_GET:
+                    yield _finding(
+                        "TL002", mod, node,
+                        f"{cname}(...) inside a traced function "
+                        "materializes on host — use jnp, or hoist the "
+                        "transfer out of the traced region", mod_fn)
+                elif cname in _HOST_SYNC_CASTS and len(node.args) == 1 and \
+                        not _is_static_expr(node.args[0], tracers,
+                                            static_calls):
+                    yield _finding(
+                        "TL002", mod, node,
+                        f"{cname}() on a traced value inside "
+                        f"'{mod_fn.qualname}' syncs device→host (the "
+                        "PR 4 lr bug) — keep it a jnp scalar, or make "
+                        "the argument static", mod_fn)
+
+    # host tier: float(<unannotated positional param>) or
+    # float(<jitted call>) in a jax-importing module
+    if not mod.imports_jax:
+        return
+    for mod_fn in mod.functions.values():
+        if mod_fn.in_trace:
+            continue
+        tracers = _tracer_params(mod_fn)
+        for node in _own_body_walk(mod, mod_fn):
+            if not (isinstance(node, ast.Call)
+                    and dotted_name(node.func) in _HOST_SYNC_CASTS
+                    and len(node.args) == 1):
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Name) and arg.id in tracers:
+                yield _finding(
+                    "TL002", mod, node,
+                    f"{dotted_name(node.func)}() on parameter "
+                    f"'{arg.id}' may hide a device→host sync if a "
+                    "caller passes a device value — annotate the "
+                    "parameter as a Python scalar or sync explicitly "
+                    "at the call site", mod_fn)
+            elif isinstance(arg, ast.Call):
+                callee = dotted_name(arg.func)
+                if callee is not None and \
+                        _is_jitted_symbol(mod, graph, callee):
+                    yield _finding(
+                        "TL002", mod, node,
+                        f"{dotted_name(node.func)}() directly on the "
+                        f"jitted call '{callee}(...)' syncs device→host "
+                        "per call — batch the reads or keep the value "
+                        "on device", mod_fn)
+
+
+def _is_jitted_symbol(mod: ModuleInfo, graph: CallGraph, name: str) -> bool:
+    """Does ``name`` refer to a jit-wrapped callable?  Exact names only
+    — an attribute access on one (``f._cache_size()``) is introspection,
+    not a traced call.  Imported names resolve through the graph into
+    the defining module's jitted symbols."""
+    if name in mod.jitted_symbols:
+        return True
+    if name in mod.functions:
+        return False
+    resolved = mod.resolve(name)
+    owner_name, _, sym = resolved.rpartition(".")
+    owner = graph.modules.get(owner_name)
+    return owner is not None and sym in owner.jitted_symbols
+
+
+def _own_body_walk(mod: ModuleInfo, fn: FunctionInfo) -> Iterable[ast.AST]:
+    """Walk fn's body but NOT the bodies of nested function defs (each
+    nested def is its own FunctionInfo and is visited separately)."""
+    own_nested = [f.node for f in mod.functions.values()
+                  if f.parent == fn.qualname]
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if child in own_nested:
+                continue
+            yield child
+            yield from walk(child)
+
+    yield from walk(fn.node)
+
+
+# ---------------------------------------------------------------------------
+# TL003 — Python branching on tracer values
+# ---------------------------------------------------------------------------
+
+def check_tl003(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL003: ``if``/``while`` on a tracer inside a traced function.
+
+    Python control flow on a traced value either raises a
+    ConcretizationTypeError at trace time or — when the value happens
+    to be concrete during tracing — silently bakes one branch into the
+    compiled program (the shape-keyed cousin of the PR 3 recompile
+    bug).  Use ``jnp.where`` / ``lax.cond`` / ``lax.while_loop``, or
+    mark the argument static.
+    """
+    static_calls = _shape_only_functions(mod)
+    for mod_fn in mod.functions.values():
+        if not mod_fn.in_trace:
+            continue
+        tracers = _tracer_params(mod_fn)
+        if not tracers:
+            continue
+        for node in _own_body_walk(mod, mod_fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if _is_static_expr(node.test, tracers, static_calls):
+                continue
+            kind = "if" if isinstance(node, ast.If) else "while"
+            offenders = sorted(_names_in(node.test) & tracers)
+            yield _finding(
+                "TL003", mod, node,
+                f"Python '{kind}' on traced value(s) "
+                f"{', '.join(offenders)} inside '{mod_fn.qualname}' — "
+                "this concretizes the tracer (or bakes in one branch); "
+                "use jnp.where/lax.cond, or declare the argument in "
+                "static_argnames", mod_fn)
+
+
+# ---------------------------------------------------------------------------
+# TL004 — loop-varying shapes flowing into jitted calls
+# ---------------------------------------------------------------------------
+
+def check_tl004(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL004: jit call sites fed per-iteration shapes.
+
+    The PR 3 bug: ``_scbf_pass`` is jitted on shapes, and a raw
+    participant axis recompiled it on nearly every round once P varied.
+    Heuristic: inside a ``for``/``while`` body, a call to a known
+    jit-wrapped symbol whose arguments slice with loop-varying bounds
+    (directly, or through a local assigned from such a slice) compiles
+    once per distinct extent — pad to static buckets
+    (repro.fed.cohort.bucket_size) or mark the extent static.
+    """
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        fn = _enclosing(mod, graph, node)
+        if fn is not None and fn.in_trace:
+            continue                        # in-trace loops are lax-land
+        loop_vars = _loop_varying_names(node)
+        shapey_locals = _loop_varying_sliced_locals(node, loop_vars)
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            callee = dotted_name(call.func)
+            if callee is None or not _is_jitted_symbol(mod, graph, callee):
+                continue
+            bad = _varying_shape_args(call, loop_vars, shapey_locals)
+            if bad:
+                yield _finding(
+                    "TL004", mod, call,
+                    f"jitted '{callee}' called with argument shape(s) "
+                    f"that vary per iteration ({', '.join(sorted(bad))}) "
+                    "— jit is shape-keyed, so each distinct extent "
+                    "recompiles; pad to a static bucket "
+                    "(fed.cohort.bucket_size) or hoist the slice",
+                    fn)
+
+
+def _loop_varying_names(loop: ast.AST) -> Set[str]:
+    """Loop targets plus names assigned inside the loop body."""
+    out: Set[str] = set()
+    if isinstance(loop, ast.For):
+        out |= _names_in(loop.target)
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                out |= _names_in(t)
+        elif isinstance(node, ast.AugAssign):
+            out |= _names_in(node.target)
+    return out
+
+
+def _slice_varies(sub: ast.Subscript, loop_vars: Set[str]) -> bool:
+    sl = sub.slice
+    if not isinstance(sl, ast.Slice):
+        return False
+    # canonical fixed-stride stream `x[i:i + B]` with loop-invariant B:
+    # the OFFSET varies but the extent does not, so jit sees the same
+    # shape every iteration (plus at most one clamped tail) — not the
+    # PR 3 recompile shape, where the extent itself varies
+    if isinstance(sl.lower, ast.Name) and sl.lower.id in loop_vars and \
+            isinstance(sl.upper, ast.BinOp) and \
+            isinstance(sl.upper.op, ast.Add) and \
+            isinstance(sl.upper.left, ast.Name) and \
+            sl.upper.left.id == sl.lower.id and \
+            not (_names_in(sl.upper.right) & loop_vars) and \
+            (sl.step is None or not (_names_in(sl.step) & loop_vars)):
+        return False
+    for bound in (sl.lower, sl.upper, sl.step):
+        if bound is not None and (_names_in(bound) & loop_vars):
+            return True
+    return False
+
+
+def _loop_varying_sliced_locals(loop: ast.AST,
+                                loop_vars: Set[str]) -> Set[str]:
+    """Locals assigned (in the loop body) from a loop-varying slice."""
+    out: Set[str] = set()
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Subscript) and \
+                        _slice_varies(sub, loop_vars):
+                    out.add(node.targets[0].id)
+    return out
+
+
+def _varying_shape_args(call: ast.Call, loop_vars: Set[str],
+                        shapey_locals: Set[str]) -> Set[str]:
+    bad: Set[str] = set()
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Subscript) and \
+                    _slice_varies(sub, loop_vars):
+                base = dotted_name(sub.value) or "<expr>"
+                bad.add(f"{base}[...]")
+            if isinstance(sub, ast.Name) and sub.id in shapey_locals:
+                bad.add(sub.id)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# TL005 — pallas_call contract checks
+# ---------------------------------------------------------------------------
+
+def check_tl005(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL005: statically-checkable ``pallas_call`` contract breaches.
+
+    A BlockSpec index map must take one argument per grid axis and
+    return one coordinate per block-shape axis; a mismatch compiles to
+    garbage indexing (or a shape error deep inside Pallas) rather than
+    failing at the call site.  Checked whenever the grid is a literal
+    tuple (or a local assigned one) — rank is known even when the
+    entries are expressions.
+    """
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func)
+        resolved = mod.resolve(callee) if callee else None
+        if resolved is None or not resolved.endswith("pallas_call"):
+            continue
+        fn = _enclosing(mod, graph, node)
+        grid_rank = _grid_rank(node, fn)
+        specs: List[ast.Call] = []
+        for kw in node.keywords:
+            if kw.arg in ("in_specs", "out_specs"):
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.List, ast.Tuple)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Call) and \
+                            (dotted_name(v.func) or "").endswith(
+                                "BlockSpec"):
+                        specs.append(v)
+        for spec in specs:
+            block_shape = spec.args[0] if spec.args else None
+            index_map = spec.args[1] if len(spec.args) > 1 else None
+            block_rank = len(block_shape.elts) if isinstance(
+                block_shape, (ast.Tuple, ast.List)) else None
+            if isinstance(index_map, ast.Lambda):
+                arity = len(index_map.args.args)
+                if grid_rank is not None and arity != grid_rank:
+                    yield _finding(
+                        "TL005", mod, spec,
+                        f"BlockSpec index map takes {arity} argument(s) "
+                        f"but the grid has {grid_rank} axis/axes — the "
+                        "index map is called with one program id per "
+                        "grid axis", fn)
+                ret = index_map.body
+                ret_rank = len(ret.elts) if isinstance(
+                    ret, (ast.Tuple, ast.List)) else 1
+                if block_rank is not None and ret_rank != block_rank:
+                    yield _finding(
+                        "TL005", mod, spec,
+                        f"BlockSpec block shape has {block_rank} "
+                        f"axis/axes but its index map returns "
+                        f"{ret_rank} coordinate(s) — every block axis "
+                        "needs exactly one index", fn)
+
+
+def _grid_rank(call: ast.Call, fn: Optional[FunctionInfo]) -> Optional[int]:
+    grid = None
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            grid = kw.value
+    if grid is None:
+        return None
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Name) and fn is not None:
+        # resolve a local `grid = (...)` assignment in the same function
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    node.targets[0].id == grid.id and \
+                    isinstance(node.value, (ast.Tuple, ast.List)):
+                return len(node.value.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None
+
+
+# ---------------------------------------------------------------------------
+# TL006 — device transfers inside host loops
+# ---------------------------------------------------------------------------
+
+def check_tl006(mod: ModuleInfo, graph: CallGraph) -> Iterable[Finding]:
+    """TL006: per-iteration device→host transfers in host loops.
+
+    The fused round loop exists because per-round host crossings
+    (device_get, np.asarray of jitted outputs, .item()) serialize
+    dispatch against device completion.  Inside ``for``/``while``
+    bodies of host functions, each such call is one sync per iteration
+    — batch them at chunk boundaries (the ``emit_fused_payloads``
+    pattern).  Comprehensions are exempt: a single post-loop gather is
+    the recommended fix, not a finding.
+    """
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        fn = _enclosing(mod, graph, node)
+        if fn is not None and fn.in_trace:
+            continue
+        for call in _loop_body_calls(node):
+            cname = dotted_name(call.func)
+            resolved = mod.resolve(cname) if cname else None
+            if resolved in _DEVICE_GET:
+                yield _finding(
+                    "TL006", mod, call,
+                    "jax.device_get inside a host loop syncs every "
+                    "iteration — accumulate on device and transfer "
+                    "once at the chunk boundary", fn)
+            elif resolved in _NP_MATERIALIZE and call.args:
+                inner = call.args[0]
+                if isinstance(inner, ast.Call):
+                    inner_name = dotted_name(inner.func)
+                    if inner_name is not None and \
+                            _is_jitted_symbol(mod, graph, inner_name):
+                        yield _finding(
+                            "TL006", mod, call,
+                            f"{cname}() of the jitted call "
+                            f"'{inner_name}(...)' inside a host loop "
+                            "transfers per iteration — keep results on "
+                            "device and gather once after the loop", fn)
+            elif isinstance(call.func, ast.Attribute) and \
+                    call.func.attr == "block_until_ready" and \
+                    not call.args:
+                yield _finding(
+                    "TL006", mod, call,
+                    "block_until_ready() inside a host loop serializes "
+                    "dispatch per iteration — block once after the "
+                    "loop (or only around timed sections)", fn)
+
+
+def _loop_body_calls(loop: ast.AST) -> Iterable[ast.Call]:
+    """Calls in the loop body, skipping comprehensions and nested defs."""
+    skip = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp,
+            ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, skip):
+                continue
+            if isinstance(child, ast.Call):
+                yield child
+            yield from walk(child)
+
+    yield from walk(loop)
+
+
+ALL_RULES = {
+    "TL001": check_tl001,
+    "TL002": check_tl002,
+    "TL003": check_tl003,
+    "TL004": check_tl004,
+    "TL005": check_tl005,
+    "TL006": check_tl006,
+}

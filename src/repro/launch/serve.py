@@ -10,9 +10,22 @@ decode-shape dry-runs).
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(bundle):
+    """One (prefill, decode) jit pair per bundle.
+
+    Building the wrappers inside ``main`` gave every invocation a fresh
+    compilation cache (tracelint TL001); callers embedding this module
+    (tests, notebooks) now reuse the compiled steps across calls.
+    """
+    import jax
+    return jax.jit(bundle.prefill_step), jax.jit(bundle.decode_step)
 
 
 def main():
@@ -39,8 +52,7 @@ def main():
     key = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
 
-    prefill = jax.jit(bundle.prefill_step)
-    decode = jax.jit(bundle.decode_step)
+    prefill, decode = _jitted_steps(bundle)
 
     batch = {"tokens": prompts, "caches": bundle.make_cache(B, args.cache_len)}
     if cfg.encoder_layers:

@@ -33,7 +33,7 @@ from repro.models.common import DTYPES
 from repro.models.layers import ModelCtx
 
 
-@dataclass
+@dataclass(eq=False)      # identity hash: bundles key per-bundle jit caches
 class ModelBundle:
     cfg: ArchConfig
     ctx: ModelCtx

@@ -1,0 +1,49 @@
+"""Shared trace-hygiene assertions for the fused-path tests.
+
+The fused engine defends two properties in CI (docs/FED_ENGINE.md):
+
+* a dispatched chunk performs **zero** implicit host transfers, and
+* a whole run costs a **bounded number of fused compiles** no matter
+  how the participant count varies.
+
+Both used to be asserted ad hoc (a raw ``jax.transfer_guard`` block
+here, a ``reset_fused_compile_count`` / ``fused_compile_count`` pair
+there).  These context managers are the single spelling; new tests and
+new engines should use them instead of re-deriving the idiom — the same
+properties tracelint's TL006/TL004 rules lint for statically.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+from repro.fed.engine import fused_compile_count, reset_fused_compile_count
+
+
+@contextlib.contextmanager
+def assert_no_transfers():
+    """The block must never cross the host boundary.
+
+    Any implicit device→host or host→device transfer inside the block
+    raises immediately (``jax.transfer_guard("disallow")``).  Compile
+    first, guard second: tracing itself is allowed to transfer, so the
+    caller warms the program up outside the block.
+    """
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def assert_compiles(at_most: int):
+    """The block may trigger at most ``at_most`` fused-program compiles.
+
+    Resets the engine's compile counter on entry and asserts on exit,
+    so the bound covers exactly the guarded block.
+    """
+    reset_fused_compile_count()
+    yield
+    count = fused_compile_count()
+    assert count <= at_most, (
+        f"fused path compiled {count}x inside the guarded block "
+        f"(allowed {at_most}) — a retrace/recompile regression")

@@ -1,0 +1,26 @@
+"""Verbatim reduction of the PR 5 bug: ``apoz_scores`` built a
+``jax.jit(lambda ...)`` inside the pruning step, so every prune loop
+recompiled the APoZ scorer.  tracelint must flag the per-call jit on a
+lambda (TL001) — the fix is the module-level jitted
+``repro.kernels.apoz.apoz_batch_fractions``."""
+import jax
+import jax.numpy as jnp
+
+
+def _hidden_acts(params, x):
+    acts = []
+    for layer in params[:-1]:
+        x = jnp.maximum(x @ layer["w"] + layer["b"], 0.0)
+        acts.append(x)
+    return acts
+
+
+def apoz_scores(params, x_val, batch_size: int = 2048):
+    scorer = jax.jit(lambda p, xb: [jnp.mean(a == 0.0, axis=0)
+                                    for a in _hidden_acts(p, xb)])
+    totals = None
+    for start in range(0, x_val.shape[0], batch_size):
+        frac = scorer(tuple(params), x_val[start:start + batch_size])
+        totals = frac if totals is None else [
+            t + f for t, f in zip(totals, frac)]
+    return totals

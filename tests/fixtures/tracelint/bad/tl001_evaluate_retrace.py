@@ -1,0 +1,23 @@
+"""Verbatim reduction of the PR 1 bug: ``scbf._evaluate`` wrapped
+``jax.jit(mlp_forward)`` inside the function body, so every evaluation
+built a fresh wrapper with a fresh compilation cache and retraced the
+forward pass from scratch.  tracelint must flag the jit construction
+(TL001) — the fix hoisted it to a module-level ``_mlp_forward_jit``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlp_forward(params, x, neuron_masks=None):
+    for layer in params:
+        x = jnp.maximum(x @ layer["w"] + layer["b"], 0.0)
+    return x[:, 0]
+
+
+def _evaluate(params, x, y, batch: int = 8192, neuron_masks=None):
+    forward = jax.jit(mlp_forward)      # rebuilt (and re-traced) per call
+    scores = []
+    for s in range(0, x.shape[0], batch):
+        scores.append(np.asarray(forward(
+            tuple(params), jnp.asarray(x[s:s + batch]), neuron_masks)))
+    return np.concatenate(scores)

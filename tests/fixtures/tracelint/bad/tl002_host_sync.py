@@ -1,0 +1,25 @@
+"""Host syncs on traced values (the PR 4 lr-bug class): ``.item()``
+and ``float()`` inside a jitted function, and ``float()`` directly on a
+jitted call in the host tier.  tracelint must flag each (TL002)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scaled_update(params, grads, lr):
+    scale = float(lr)                       # device→host sync under trace
+    return jax.tree_util.tree_map(
+        lambda p, g: p - scale * g, params, grads)
+
+
+@jax.jit
+def loss_scalar(logits, targets):
+    loss = jnp.mean((logits - targets) ** 2)
+    return loss.item()                      # fails under jit outright
+
+
+_forward = jax.jit(lambda p, x: x @ p)
+
+
+def host_metric(p, x):
+    return float(_forward(p, x))            # blocks dispatch per call

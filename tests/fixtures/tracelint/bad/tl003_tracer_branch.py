@@ -1,0 +1,20 @@
+"""Python control flow on tracer values inside traced functions:
+either a ConcretizationTypeError at trace time, or one branch silently
+baked into the compiled program.  tracelint must flag both the ``if``
+and the ``while`` (TL003)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp_step(delta, threshold):
+    if delta.sum() > threshold:             # branches on a tracer
+        return delta * 0.5
+    return delta
+
+
+@jax.jit
+def iterate(x):
+    while x.max() > 1.0:                    # tracer-valued loop condition
+        x = x * 0.9
+    return x

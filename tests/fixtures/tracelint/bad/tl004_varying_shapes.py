@@ -1,0 +1,20 @@
+"""The PR 3 recompile class: a jitted function fed a slice whose
+extent changes per loop iteration.  jit caches per shape, so every
+distinct extent is a fresh compile.  tracelint must flag the call site
+(TL004) both for a direct slice argument and for a local assigned from
+one."""
+import jax
+import jax.numpy as jnp
+
+score_batch = jax.jit(lambda x: jnp.tanh(x).sum(axis=1))
+
+
+def stream_scores(x, sizes):
+    out = []
+    start = 0
+    for n in sizes:                        # n varies per iteration
+        out.append(score_batch(x[start:start + n]))     # direct slice
+        xb = x[start:start + n]
+        out.append(score_batch(xb))                     # via a local
+        start += n
+    return out

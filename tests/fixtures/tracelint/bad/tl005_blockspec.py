@@ -1,0 +1,33 @@
+"""pallas_call contract breaches tracelint can prove statically: an
+index map whose arity disagrees with the grid rank, and one returning
+the wrong number of block coordinates.  Both compile to garbage
+indexing instead of failing at the call site (TL005)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] == 0.0).sum(axis=0)
+
+
+def bad_arity_counts(x, bb: int = 8, bn: int = 128):
+    b, n = x.shape
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(b // bb, n // bn),
+        in_specs=[pl.BlockSpec((bb, bn), lambda i: (i, 0))],   # 2D grid
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+    )(x)
+
+
+def bad_rank_counts(x, bb: int = 8, bn: int = 128):
+    b, n = x.shape
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(b // bb, n // bn),
+        in_specs=[pl.BlockSpec((bb, bn), lambda i, j: (i,))],  # 2D block
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+    )(x)

@@ -1,0 +1,18 @@
+"""Per-iteration device→host crossings in host loops — the reason the
+fused round loop exists.  tracelint must flag device_get, np.asarray of
+a jitted call, and block_until_ready inside the loop body (TL006)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+train_round = jax.jit(lambda p, b: p + b.mean())
+
+
+def run_rounds(params, batches):
+    history = []
+    for b in batches:
+        params = train_round(params, b)
+        history.append(jax.device_get(params))          # sync per round
+        history.append(np.asarray(train_round(params, b)))
+        params.block_until_ready()                      # serializes dispatch
+    return params, history

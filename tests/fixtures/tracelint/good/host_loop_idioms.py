@@ -1,0 +1,29 @@
+"""Host-loop patterns that are the RECOMMENDED fixes — tracelint must
+report nothing: device-resident accumulation with one post-loop
+gather, comprehension gathers, and fixed-shape streaming through a
+module-level jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+train_round = jax.jit(lambda p, b: p + b.mean())
+score_batch = jax.jit(lambda x: jnp.tanh(x).sum(axis=1))
+
+BATCH = 256
+
+
+def run_rounds(params, batches):
+    # accumulate on device; transfer ONCE after the loop
+    history = []
+    for b in batches:
+        params = train_round(params, b)
+        history.append(params)
+    return params, [np.asarray(h) for h in history]
+
+
+def stream_fixed(x):
+    # fixed extent per iteration: one compile for the whole stream
+    out = []
+    for start in range(0, x.shape[0] - BATCH + 1, BATCH):
+        out.append(score_batch(x[start:start + BATCH]))
+    return jnp.concatenate(out)

@@ -1,0 +1,63 @@
+"""Every accepted jit-caching idiom in one file — tracelint must
+report NOTHING here.  These mirror the real fixes: the module-level
+wrapper (PR 1), the ``lru_cache`` factory (``fed.engine``), the
+cache-guarded attribute (engine lazy-build), and jit-as-decorator."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_forward(params, x):
+    for layer in params:
+        x = jnp.maximum(x @ layer["w"] + layer["b"], 0.0)
+    return x
+
+
+# idiom 1: module-level wrapper — one compile cache for the process
+_mlp_forward_jit = jax.jit(mlp_forward)
+
+# idiom 1b: partial-applied jit with static args, still module level
+local_train = functools.partial(jax.jit, static_argnames=("epochs",))(
+    mlp_forward)
+
+
+# idiom 2: lru_cache factory — one wrapper per config signature
+@functools.lru_cache(maxsize=None)
+def _fused_programs(horizon: int, num_slots: int):
+    def chunk(params, plan):
+        return jax.lax.scan(lambda p, r: (p, None), params, plan)
+    return jax.jit(chunk)
+
+
+# idiom 3: cache-guarded attribute — lazy build, reused thereafter
+class Engine:
+    def __init__(self):
+        self._step = None
+
+    def step(self, params, batch):
+        if self._step is None:
+            self._step = jax.jit(mlp_forward)
+        return self._step(params, batch)
+
+
+# idiom 3b: dict-slot cache with a membership guard
+_PROGRAMS = {}
+
+
+def program_for(key: str):
+    if key not in _PROGRAMS:
+        _PROGRAMS[key] = jax.jit(mlp_forward)
+    return _PROGRAMS[key]
+
+
+# idiom 4: jit as a decorator on a module-level def
+@jax.jit
+def scbf_sum_step(params, deltas):
+    return jax.tree_util.tree_map(lambda p, d: p + d, params, deltas)
+
+
+@functools.partial(jax.jit, static_argnames=("upload_rate",))
+def masked_sum(params, deltas, upload_rate: float = 0.1):
+    return jax.tree_util.tree_map(lambda p, d: p + d * upload_rate,
+                                  params, deltas)

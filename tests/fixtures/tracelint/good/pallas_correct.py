@@ -1,0 +1,23 @@
+"""A contract-correct pallas_call mirroring ``kernels.apoz`` — 2-axis
+grid, index maps with matching arity and block-rank coordinates.
+tracelint must report nothing (TL005 false positives here would poison
+every kernel in the repo)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] == 0.0).sum(axis=0).astype(jnp.int32)
+
+
+def apoz_counts(x, bb: int = 8, bn: int = 128):
+    b, n = x.shape
+    grid = (b // bb, n // bn)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+    )(x)

@@ -1,0 +1,50 @@
+"""Branching that LOOKS tracer-dependent but is static — tracelint
+must report nothing.  Mirrors the real sites: shape attributes,
+dict-pytree membership, config fields, ``is None`` tests, and a
+shape-only helper (``channels.num_channels``)."""
+import jax
+import jax.numpy as jnp
+
+MAX_MATERIALIZED = 1 << 22
+
+
+def num_channels(scores):
+    n = 1
+    for s in scores:
+        n *= int(s.shape[0])
+    return n
+
+
+@jax.jit
+def apply_bias(p, x):
+    if "bias" in p:                      # dict membership: structural
+        x = x + p["bias"]
+    if x.ndim == 3:                      # shape attribute: static
+        x = x.reshape(x.shape[0], -1)
+    return x
+
+
+@jax.jit
+def select(scores, threshold, *, exact: bool = True):
+    if num_channels(scores) <= MAX_MATERIALIZED:   # shape-only helper
+        pass
+    if exact:                            # keyword-only: static config
+        return [jnp.where(s >= threshold, s, 0.0) for s in scores]
+    return scores
+
+
+@jax.jit
+def maybe_mask(x, mask=None):
+    if mask is None:                     # identity test: python-level
+        return x
+    return x * mask
+
+
+def layer_specs(cfg, x):
+    # attribute access on a config param is a field read, not a
+    # tracer concretization
+    if cfg.encoder_layers:
+        return ["cross"] * int(cfg.encoder_layers)
+    if bool(cfg.cross_attn_every):
+        return ["cross", "self"]
+    return ["self"] * x.ndim

@@ -13,11 +13,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _trace_guards import assert_compiles, assert_no_transfers
 from repro.config import FedConfig, ScbfConfig, TrainConfig
 from repro.core.scbf import run_federated
 from repro.data.medical import generate_cohort
-from repro.fed.engine import (fused_compile_count, make_engine,
-                              reset_fused_compile_count)
+from repro.fed.engine import make_engine
 from repro.models.mlp_net import init_mlp
 
 
@@ -174,15 +174,13 @@ def test_fused_scbfwp_at_most_two_compiles(cohort):
     horizon-1 masked program the prune phase runs on, and the
     horizon-S program for everything after (compacted geometry when
     prune_compact, masked full geometry otherwise)."""
-    reset_fused_compile_count()
-    res = run_federated(cohort, _tcfg(4, loops=10), method="scbf",
-                        mlp_features=FEATS)
+    with assert_compiles(2):
+        res = run_federated(cohort, _tcfg(4, loops=10), method="scbf",
+                            mlp_features=FEATS)
     assert res.records[0].hidden_sizes != res.records[-1].hidden_sizes
-    assert fused_compile_count() <= 2
-    reset_fused_compile_count()
-    run_federated(cohort, _tcfg(4, loops=10, compact=False),
-                  method="scbf", mlp_features=FEATS)
-    assert fused_compile_count() <= 2
+    with assert_compiles(2):
+        run_federated(cohort, _tcfg(4, loops=10, compact=False),
+                      method="scbf", mlp_features=FEATS)
 
 
 def _engine_fixture(K=5, n=24, d=12, seed=0, hidden=(8, 4)):
@@ -232,7 +230,7 @@ def test_masked_fused_chunk_runs_under_transfer_guard():
     warm = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
     eng.fused_scbf_chunk(warm, plan, cfg, nmasks=nmasks)  # compile
     fresh = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
-    with jax.transfer_guard("disallow"):
+    with assert_no_transfers():
         new_p, masked, masks = eng.fused_scbf_chunk(fresh, plan, cfg,
                                                     nmasks=nmasks)
     emitted = eng.emit_fused_payloads(masked, masks, plan, keep=keep)

@@ -10,11 +10,11 @@ import jax
 import numpy as np
 import pytest
 
+from _trace_guards import assert_compiles, assert_no_transfers
 from repro.config import FedConfig, ScbfConfig, TrainConfig
 from repro.core.scbf import run_federated
 from repro.data.medical import generate_cohort
-from repro.fed.engine import (fused_compile_count, make_engine,
-                              reset_fused_compile_count)
+from repro.fed.engine import make_engine
 from repro.fed.scheduler import make_scheduler
 from repro.models.mlp_net import init_mlp
 
@@ -231,7 +231,7 @@ def test_fused_chunk_runs_under_transfer_guard():
     warm = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
     eng.fused_scbf_chunk(warm, plan, cfg)          # compile outside guard
     fresh = jax.tree_util.tree_map(lambda a: a + 0, tuple(params))
-    with jax.transfer_guard("disallow"):
+    with assert_no_transfers():
         new_p, masked, masks = eng.fused_scbf_chunk(fresh, plan, cfg)
     emitted = eng.emit_fused_payloads(masked, masks, plan)
     assert [len(p) for p, _ in emitted] == [5, 3, 0]
@@ -243,15 +243,14 @@ def test_fused_compiles_once_across_varying_p(cohort):
     """The (S, B) plan is padded to a run-constant shape — short tail
     chunks and every distinct P included — so a whole varying-P run
     costs at most 2 fused compiles (expected: exactly 1)."""
-    reset_fused_compile_count()
     kw = dict(loops=10, K=8, batch=32, sample_fraction=0.5,
               dropout_rate=0.25)
-    res = run_federated(cohort, _tcfg(4, **kw), method="scbf",
-                        mlp_features=FEATS)
+    with assert_compiles(2):
+        res = run_federated(cohort, _tcfg(4, **kw), method="scbf",
+                            mlp_features=FEATS)
     ps = {r.num_participants for r in res.records if r.num_participants}
     assert len(ps) > 1
     assert sum(r.sparse_bytes for r in res.records) > 0
-    assert fused_compile_count() <= 2
 
 
 # ---------------------------------------------------------------------------

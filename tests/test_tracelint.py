@@ -1,0 +1,361 @@
+"""tracelint: the static gate for the retrace/host-sync/recompile bug
+class (docs/STATIC_ANALYSIS.md).
+
+Covers the PR 6 acceptance bars: every golden bad-fixture (including
+the verbatim PR 1 ``_evaluate`` and PR 5 ``apoz_scores`` reductions) is
+detected with the right rule code; the known-good idiom fixtures
+produce ZERO findings; suppression comments and the committed baseline
+both gate correctly; finding keys survive line shifts; the CLI exits
+nonzero on an injected TL001 (the CI lint job's contract); and the
+per-call-jit fixes this PR shipped (serve, dryrun, train) actually
+cache their wrappers.
+"""
+import json
+import os
+import pathlib
+import shutil
+import subprocess
+import sys
+import textwrap
+from collections import Counter
+
+import pytest
+
+from repro.analysis import astgraph
+from repro.analysis.report import Baseline
+from repro.analysis.tracelint import run_paths
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "tracelint"
+
+# filename -> exactly which rules fire, and how often (no extras!)
+BAD_EXPECT = {
+    "tl001_evaluate_retrace.py": {"TL001": 1},   # the PR 1 bug, verbatim
+    "tl001_apoz_jit_lambda.py": {"TL001": 1},    # the PR 5 bug, verbatim
+    "tl002_host_sync.py": {"TL002": 3},
+    "tl003_tracer_branch.py": {"TL003": 2},
+    "tl004_varying_shapes.py": {"TL004": 2},
+    "tl005_blockspec.py": {"TL005": 2},
+    "tl006_host_loop_transfers.py": {"TL006": 3},
+}
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fname", sorted(BAD_EXPECT))
+def test_bad_fixture_detected_with_exact_rules(fname):
+    findings, _ = run_paths([str(FIXTURES / "bad" / fname)])
+    got = Counter(f.rule for f in findings)
+    assert got == Counter(BAD_EXPECT[fname]), \
+        f"{fname}: {[f.render() for f in findings]}"
+
+
+def test_bad_fixture_coverage_is_all_rules():
+    """The bad fixtures exercise every rule the analyzer ships."""
+    from repro.analysis.rules import ALL_RULES
+    covered = {r for expect in BAD_EXPECT.values() for r in expect}
+    assert covered == set(ALL_RULES)
+
+
+def test_good_fixtures_zero_false_positives():
+    findings, files = run_paths([str(FIXTURES / "good")])
+    assert files == 4
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# the call graph
+# ---------------------------------------------------------------------------
+
+def test_in_trace_marking_transitive(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(textwrap.dedent("""
+        import jax
+        from jax import lax
+
+        def traced_root(p, x):
+            return helper(p, x)
+
+        def helper(p, x):
+            def nested(q):
+                return inner(q)
+            return nested(p) + x
+
+        def inner(p):
+            return p
+
+        def scan_body(carry, x):
+            return carry, x
+
+        def host_only(p):
+            return float(p)
+
+        step = jax.jit(traced_root)
+
+        def driver(p, xs):
+            return lax.scan(scan_body, p, xs)
+    """))
+    graph = astgraph.build_graph([str(f)])
+    mod = next(iter(graph.modules.values()))
+    in_trace = {q for q, fn in mod.functions.items() if fn.in_trace}
+    assert "traced_root" in in_trace          # jit-wrapped at module level
+    assert "helper" in in_trace               # called from a traced fn
+    assert "helper.nested" in in_trace        # nested defs trace along
+    assert "inner" in in_trace                # transitively reached
+    assert "scan_body" in in_trace            # lax.scan traced callable
+    assert "host_only" not in in_trace
+    assert "driver" not in in_trace           # calls scan, isn't traced
+    assert "step" in mod.jitted_symbols
+
+
+def test_static_argnames_are_not_tracers(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(textwrap.dedent("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def select(x, mode):
+            if mode:
+                return x * 2.0
+            return x
+    """))
+    findings, _ = run_paths([str(f)])
+    assert findings == [], [x.render() for x in findings]
+
+
+# ---------------------------------------------------------------------------
+# suppressions, baseline, key stability
+# ---------------------------------------------------------------------------
+
+_PER_CALL_JIT = textwrap.dedent("""
+    import jax
+
+    def main(p, x):
+        step = jax.jit(lambda p, x: p + x){suffix}
+        return step(p, x)
+""")
+
+
+def test_suppression_comment_silences(tmp_path):
+    noisy = tmp_path / "noisy.py"
+    noisy.write_text(_PER_CALL_JIT.format(suffix=""))
+    assert len(run_paths([str(noisy)])[0]) == 1
+
+    quiet = tmp_path / "quiet.py"
+    quiet.write_text(_PER_CALL_JIT.format(
+        suffix="  # tracelint: disable=TL001"))
+    assert run_paths([str(quiet)])[0] == []
+
+    # the wrong code does NOT silence it
+    wrong = tmp_path / "wrong.py"
+    wrong.write_text(_PER_CALL_JIT.format(
+        suffix="  # tracelint: disable=TL004"))
+    assert len(run_paths([str(wrong)])[0]) == 1
+
+
+def test_finding_keys_survive_line_shifts(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(_PER_CALL_JIT.format(suffix=""))
+    before = run_paths([str(f)])[0]
+    f.write_text("# a new header comment\n# another\n\n"
+                 + _PER_CALL_JIT.format(suffix=""))
+    after = run_paths([str(f)])[0]
+    assert [x.key for x in after] == [x.key for x in before]
+    assert after[0].line == before[0].line + 3   # line moved; key did not
+
+
+def test_baseline_roundtrip_and_stale_detection(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(_PER_CALL_JIT.format(suffix=""))
+    findings, _ = run_paths([str(f)])
+    bl_path = tmp_path / "baseline.json"
+    Baseline().write(str(bl_path), findings)
+
+    bl = Baseline.load(str(bl_path))
+    new, accepted, stale = bl.split(findings)
+    assert (len(new), len(accepted), stale) == (0, 1, [])
+
+    # justifications survive a rewrite
+    data = json.loads(bl_path.read_text())
+    data["findings"][0]["justification"] = "intentional: bench-only"
+    bl_path.write_text(json.dumps(data))
+    Baseline.load(str(bl_path)).write(str(bl_path), findings)
+    assert json.loads(bl_path.read_text())["findings"][0][
+        "justification"] == "intentional: bench-only"
+
+    # a fixed finding shows up as stale, never silently lingers
+    new, accepted, stale = Baseline.load(str(bl_path)).split([])
+    assert (new, accepted) == ([], []) and len(stale) == 1
+
+    # unknown versions refuse to load rather than mis-gating
+    bl_path.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(bl_path))
+
+
+def test_committed_baseline_matches_repo(monkeypatch):
+    """The shipped gate: the committed baseline is near-empty, every
+    entry is justified, and the repo lints clean against it."""
+    bl = Baseline.load(str(REPO / "analysis" / "baseline.json"))
+    assert len(bl.entries) <= 4
+    for key, rec in bl.entries.items():
+        just = rec.get("justification", "")
+        assert just and "TODO" not in just, f"unjustified baseline: {key}"
+    monkeypatch.chdir(REPO)   # relative paths, as the CI lint job runs
+    findings, files = run_paths(["src", "benchmarks", "examples"])
+    assert files > 50
+    keys = {x.key for x in findings}
+    assert keys == set(bl.entries), \
+        f"repo drifted from analysis/baseline.json: {sorted(keys)}"
+
+
+# ---------------------------------------------------------------------------
+# the CLI — the CI lint job's exact contract
+# ---------------------------------------------------------------------------
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.tracelint", *args],
+        env=env, cwd=cwd, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_gate_fails_on_injected_tl001(tmp_path):
+    tree = tmp_path / "pkg"
+    tree.mkdir()
+    shutil.copy(FIXTURES / "good" / "jit_caching_idioms.py", tree)
+    out = _run_cli([str(tree), "--baseline", ""], cwd=tmp_path)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+    # inject the TL001 regression: the gate must go red
+    (tree / "regress.py").write_text(_PER_CALL_JIT.format(suffix=""))
+    out = _run_cli([str(tree), "--baseline", ""], cwd=tmp_path)
+    assert out.returncode == 1
+    assert "TL001" in out.stdout and "regress.py" in out.stdout
+
+    # accepting into a baseline brings it back to green...
+    bl = tmp_path / "baseline.json"
+    out = _run_cli([str(tree), "--baseline", str(bl), "--write-baseline"],
+                   cwd=tmp_path)
+    assert out.returncode == 0
+    out = _run_cli([str(tree), "--baseline", str(bl)], cwd=tmp_path)
+    assert out.returncode == 0
+    # ...and a SECOND regression still fails against that baseline
+    (tree / "regress2.py").write_text(_PER_CALL_JIT.format(suffix=""))
+    out = _run_cli([str(tree), "--baseline", str(bl)], cwd=tmp_path)
+    assert out.returncode == 1 and "regress2.py" in out.stdout
+
+
+def test_cli_json_out_and_rule_subset(tmp_path):
+    tree = tmp_path / "pkg"
+    tree.mkdir()
+    (tree / "regress.py").write_text(_PER_CALL_JIT.format(suffix=""))
+    report = tmp_path / "report.json"
+    out = _run_cli([str(tree), "--baseline", "", "--json-out", str(report)],
+                   cwd=tmp_path)
+    assert out.returncode == 1
+    data = json.loads(report.read_text())
+    assert [f["rule"] for f in data["new"]] == ["TL001"]
+    assert data["baselined"] == [] and data["files_scanned"] == 1
+    # rule subsetting: TL004-only run ignores the TL001
+    out = _run_cli([str(tree), "--baseline", "", "--rules", "TL004"],
+                   cwd=tmp_path)
+    assert out.returncode == 0
+    # unknown rules are a usage error, not a silent pass
+    out = _run_cli([str(tree), "--baseline", "", "--rules", "TL999"],
+                   cwd=tmp_path)
+    assert out.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# the per-call-jit fixes this PR shipped: wrappers are really cached
+# ---------------------------------------------------------------------------
+
+class _Bundle:
+    """Identity-hashed stand-in for ModelBundle (which is eq=False so it
+    can key per-bundle jit caches)."""
+
+    def __init__(self, **kw):
+        self.__dict__.update(kw)
+
+
+def test_serve_jitted_steps_cached_per_bundle():
+    import jax.numpy as jnp
+    from repro.launch import serve
+
+    traces = Counter()
+
+    def prefill_step(params, batch):
+        traces["prefill"] += 1
+        return params + batch, batch
+
+    def decode_step(params, batch):
+        traces["decode"] += 1
+        return params * batch, batch
+
+    bundle = _Bundle(prefill_step=prefill_step,
+                             decode_step=decode_step)
+    p1, d1 = serve._jitted_steps(bundle)
+    p2, d2 = serve._jitted_steps(bundle)
+    assert p1 is p2 and d1 is d2          # one wrapper pair per bundle
+    x = jnp.ones((2, 2))
+    p1(x, x), p2(x, x), d1(x, x), d2(x, x)
+    assert traces == {"prefill": 1, "decode": 1}   # one trace each
+
+    other = _Bundle(prefill_step=prefill_step,
+                            decode_step=decode_step)
+    assert serve._jitted_steps(other)[0] is not p1  # distinct bundle
+
+
+def test_dryrun_step_cache_reuses_wrapper():
+    import jax.numpy as jnp
+
+    # importing dryrun appends the 512-virtual-device XLA flag; jax is
+    # already initialized in this process so it cannot take effect, but
+    # restore the env so subprocess-spawning tests stay deterministic
+    before = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch import dryrun
+    finally:
+        if before is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = before
+
+    dryrun._STEP_CACHE.clear()
+    traces = Counter()
+
+    def step(p, b):
+        traces["step"] += 1
+        return p + b
+
+    try:
+        j1 = dryrun._jitted_step(("qwen", "train_4k", "single"), step,
+                                 None, None)
+        j2 = dryrun._jitted_step(("qwen", "train_4k", "single"),
+                                 lambda p, b: p, None, None)
+        assert j1 is j2                   # same combo: cached wrapper wins
+        x = jnp.ones((2,))
+        j1(x, x), j2(x, x)
+        assert traces["step"] == 1        # one trace for the combo
+        j3 = dryrun._jitted_step(("qwen", "decode_4k", "single"), step,
+                                 None, None)
+        assert j3 is not j1
+    finally:
+        dryrun._STEP_CACHE.clear()
+
+
+def test_train_fed_lm_step_cached():
+    from repro.config import ScbfConfig
+    from repro.launch import train
+
+    bundle = _Bundle(loss_fn=lambda p, b: (p * b).sum())
+    scbf = ScbfConfig(upload_rate=0.1, num_clients=2)
+    s1 = train._fed_lm_step(bundle, scbf, 0.05)
+    assert train._fed_lm_step(bundle, scbf, 0.05) is s1
+    assert train._fed_lm_step(bundle, scbf, 0.06) is not s1
