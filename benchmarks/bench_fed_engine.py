@@ -21,7 +21,10 @@ BENCH_fed_engine.json so the perf trajectory accumulates):
    (engine round + host aggregate per round) vs whole ``lax.scan``
    chunks with on-device aggregation at K=500 full participation, plus
    a 30-round varying-P trace asserting the fused path stays <= 2
-   compiles (the run-constant (S, B) plan).
+   compiles (the run-constant (S, B) plan).  Also times the same fused
+   trace with the flight recorder on (repro.obs device metrics +
+   chunk-boundary offload + event log) — the telemetry overhead gated
+   by check_fed_regression.py and documented in docs/OBSERVABILITY.md.
 5. **Fused SCBFwP** (``--prune``) — mask-mode pruning on the fused
    path (``prune_impl="mask"``): cold wall clock of fused-SCBFwP vs
    per-round reshape-SCBFwP (which recompiles every program after each
@@ -67,6 +70,14 @@ from repro.fed.engine import (fused_compile_count, make_engine,
 from repro.fed.scheduler import SyncScheduler
 from repro.fed.strategy import RoundContribution, ScbfSum
 from repro.models.mlp_net import init_mlp
+from repro.obs import EMITTER, metrics as obsm, report as obs_report, \
+    trace as obstrace
+
+# Version of the --json-out blob (checked by check_fed_regression.py —
+# a mismatched baseline is refused, not mis-compared).  2 = the
+# flight-recorder telemetry section (fused.telemetry + top-level
+# schema/emitter handshake).
+RESULT_SCHEMA = 2
 
 
 def _synthetic_clients(K: int, n_per_client: int, d: int, seed: int = 0):
@@ -197,7 +208,8 @@ def _round_key_rows(key, participants_sizes):
 
 
 def run_fused_section(quick: bool = True, rounds: int = 12,
-                      fuse: int = 6, trace_rounds: int = 30):
+                      fuse: int = 6, trace_rounds: int = 30,
+                      events_out=None):
     """Section 4 (``--fuse``): the device-resident fused round loop.
 
     a) K=500 full participation: ``rounds`` whole SCBF rounds through
@@ -245,7 +257,7 @@ def run_fused_section(quick: bool = True, rounds: int = 12,
     # ---- fused path: same trace, chunks of `fuse` rounds ----
     B = eng.fused_num_slots(K)
 
-    def fused_run(rows, params0):
+    def fused_run(rows, params0, collect=False):
         # fresh device copies: the chunk call donates its params buffers
         # on backends that support donation, and params0 is reused by
         # the caller (warmup run, then the timed run)
@@ -257,10 +269,24 @@ def run_fused_section(quick: bool = True, rounds: int = 12,
                 [part] * len(chunk), [lr] * len(chunk),
                 [r[0] for r in chunk], [r[1] for r in chunk],
                 [r[2] for r in chunk], horizon=fuse, num_slots=B)
-            state_p, masked, masks = eng.fused_scbf_chunk(state_p, plan,
-                                                          cfg)
+            if collect:
+                state_p, masked, masks, met = eng.fused_scbf_chunk(
+                    state_p, plan, cfg, collect=True)
+            else:
+                state_p, masked, masks = eng.fused_scbf_chunk(state_p,
+                                                              plan, cfg)
             for pls, _ in eng.emit_fused_payloads(masked, masks, plan):
                 total += sum(p.nbytes for p in pls)
+            if collect:
+                # the driver's pattern: ONE offload per chunk boundary,
+                # then host-side round events off the fetched metrics
+                for i, dm in enumerate(obsm.offload(met,
+                                                    rounds=plan.rounds)):
+                    obstrace.event("round", loop=c0 + i,
+                                   participants=dm["participants"],
+                                   train_loss=dm["train_loss"],
+                                   sparse_bytes=dm["sparse_bytes"],
+                                   codec_bytes=dm["codec_bytes"])
         return state_p, total
 
     _, warm_rows = _round_key_rows(jax.random.PRNGKey(9), [K] * fuse)
@@ -275,6 +301,39 @@ def run_fused_section(quick: bool = True, rounds: int = 12,
     emit(f"fed_round_fused_K{K}", fused_s * 1e6,
          f"fuse_rounds={fuse};speedup_vs_per_round={speedup:.1f}x;"
          f"upload_bytes={fused_bytes}")
+
+    # ---- telemetry overhead: same fused trace, flight recorder on ----
+    # Warm the collect=True program outside any recording (its events
+    # no-op), then time ALTERNATING plain/recorded repeats and take the
+    # min of each — both sides must sample the same process state, or
+    # allocator warm-up between two distant timings swamps the real
+    # delta.  The recorded side carries the full telemetry cost: the
+    # on-device MetricsCarry arithmetic, the one chunk-boundary
+    # offload, and the host event log.  Gated (<= 25%) by
+    # check_fed_regression.py; the measured number is committed in
+    # docs/OBSERVABILITY.md.
+    fused_run(warm_rows, params, collect=True)
+    plain_ts, telem_ts = [], []
+    rec = obstrace.Recorder()
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fused_run(rows, params)
+        plain_ts.append(time.perf_counter() - t0)
+        rec = obstrace.Recorder()
+        with obstrace.recording(recorder=rec):
+            t0 = time.perf_counter()
+            _, telem_bytes = fused_run(rows, params, collect=True)
+            telem_ts.append(time.perf_counter() - t0)
+        assert telem_bytes == per_round_bytes, \
+            "telemetry must not change what ships"
+    plain_s = min(plain_ts) / rounds
+    telem_s = min(telem_ts) / rounds
+    overhead = telem_s / plain_s - 1.0
+    if events_out:
+        rec.write(events_out)
+    emit(f"fed_round_fused_telemetry_K{K}", telem_s * 1e6,
+         f"overhead_vs_plain={overhead:.1%};"
+         f"host_offloads={rec.counters['host_offloads']}")
 
     # ---- compile-count trace: varying P, one run-constant (S, B) ----
     Kt = 32
@@ -319,6 +378,10 @@ def run_fused_section(quick: bool = True, rounds: int = 12,
     return {"K": K, "rounds": rounds, "fuse_rounds": fuse,
             "per_round_s": per_round_s, "fused_s": fused_s,
             "speedup": speedup, "upload_bytes": fused_bytes,
+            "telemetry": {"overhead": overhead,
+                          "fused_plain_s": plain_s,
+                          "fused_telemetry_s": telem_s,
+                          "summary": obs_report.summarize(rec.events)},
             "compile_trace": {"rounds": trace_rounds,
                               "distinct_P": len(seen_p),
                               "compiles": compiles,
@@ -447,12 +510,17 @@ def main():
     ap.add_argument("--json-out", default=None,
                     help="also write the results as JSON (CI writes "
                          "BENCH_fed_engine.json)")
+    ap.add_argument("--events-out", default=None,
+                    help="write the fused section's flight-recorder "
+                         "events.jsonl (render with python -m "
+                         "repro.obs.report; needs --fuse)")
     args = ap.parse_args()
     quick = args.quick or not args.full
 
     rows = run(quick=quick)
     compiles = run_compile_counts(quick=quick)
-    fused = run_fused_section(quick=quick) if args.fuse else None
+    fused = run_fused_section(quick=quick, events_out=args.events_out) \
+        if args.fuse else None
     prune = run_prune_section(quick=quick) if args.prune else None
     pod = run_pod_scaling(quick=quick, pods=_PODS)
 
@@ -470,6 +538,9 @@ def main():
               f"per round ({fused['speedup']:.1f}x); varying-P trace "
               f"{fused['compile_trace']['rounds']} rounds -> "
               f"{fused['compile_trace']['compiles']} compiles")
+        tel = fused["telemetry"]
+        print(f"# fused telemetry: {tel['fused_telemetry_s']:.4f}s/round "
+              f"with flight recorder on ({tel['overhead']:+.1%} vs plain)")
     if prune:
         st = prune["steady"]
         print(f"# fused SCBFwP K={prune['K']} S={prune['fuse_rounds']}: "
@@ -483,7 +554,9 @@ def main():
               f"({pod['speedup']:.2f}x)")
 
     if args.json_out:
-        blob = {"quick": quick, "k_scaling": rows, "compile_counts": compiles,
+        blob = {"schema": RESULT_SCHEMA, "emitter": EMITTER,
+                "quick": quick, "k_scaling": rows,
+                "compile_counts": compiles,
                 "fused": fused, "prune": prune, "pod_scaling": pod}
         with open(args.json_out, "w") as f:
             json.dump(blob, f, indent=1)

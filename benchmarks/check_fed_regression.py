@@ -21,6 +21,16 @@ runner cannot fail the gate spuriously:
   * **compile counts** — fully deterministic; ANY growth fails (a
     retracing regression is exactly the bug class PR 3/4 fixed, and
     the fused-SCBFwP count is the PR 5 acceptance bar: <= 2).
+  * **telemetry overhead** — the fused section's flight-recorder run
+    (repro.obs) must stay within ``TELEMETRY_OVERHEAD_MAX`` of the
+    plain fused run.  The acceptance target is < 5% (the measured
+    number lives in docs/OBSERVABILITY.md); the CI gate is looser
+    because the overhead is a ratio of two *short* wall-clock timings
+    and absolute jitter does not fully cancel.
+
+Both JSON blobs carry a ``schema`` version (bench RESULT_SCHEMA); a
+mismatch on either side is refused outright with a refresh
+instruction — never compared field-by-field against guessed meanings.
 
 Refresh the baseline after an intentional perf change with EXACTLY the
 command CI runs (ci.yml bench-smoke), then commit the result with a
@@ -37,6 +47,8 @@ import sys
 from typing import List
 
 RATIO_TOLERANCE = 0.75      # fresh fused ratio must be >= 75% of baseline
+SCHEMA = 2                  # bench_fed_engine.RESULT_SCHEMA this reader groks
+TELEMETRY_OVERHEAD_MAX = 0.25   # CI bound; the target (<5%) is in the docs
 
 
 def compare(fresh: dict, baseline: dict) -> List[str]:
@@ -46,6 +58,17 @@ def compare(fresh: dict, baseline: dict) -> List[str]:
     results — a bench refactor that silently drops a section must fail
     the gate, not vacuously pass it.
     """
+    # schema handshake first: comparing blobs of different formats
+    # produces confidently-wrong verdicts, so refuse with the fix
+    for label, blob in (("fresh", fresh), ("baseline", baseline)):
+        if blob.get("schema") != SCHEMA:
+            return [
+                f"{label} results carry schema {blob.get('schema')!r}, "
+                f"this checker reads schema {SCHEMA} — regenerate the "
+                f"{label} JSON with the current bench (refresh command "
+                "in this module's docstring) instead of comparing "
+                "mismatched formats"]
+
     failures = []
 
     # k_scaling rows are informational (their seq-vs-batched ratio is
@@ -78,6 +101,16 @@ def compare(fresh: dict, baseline: dict) -> List[str]:
         if fc > bc:
             failures.append(f"fused compile trace: {fc} compiles > "
                             f"baseline {bc}")
+        tel = f.get("telemetry")
+        if tel is None:
+            failures.append("fused.telemetry missing from fresh results "
+                            "(schema 2 always records it)")
+        elif tel["overhead"] > TELEMETRY_OVERHEAD_MAX:
+            failures.append(
+                f"telemetry overhead {tel['overhead']:.1%} > "
+                f"{TELEMETRY_OVERHEAD_MAX:.0%} bound (flight recorder "
+                "must stay off the hot path — check for in-chunk "
+                "offloads or extra compiles)")
     elif b and not f:
         failures.append("fused section missing from fresh results "
                         "(baseline has one — run the bench with --fuse)")

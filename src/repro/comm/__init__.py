@@ -4,12 +4,13 @@ Single source of truth for what SCBF ships over the network and what it
 costs — see ``repro.comm.wire`` and docs/WIRE_FORMAT.md.
 """
 from repro.comm.wire import (LayerPayload, Payload, apply_payloads,
-                             bitmap_bytes, cheapest_bytes, codec_bytes,
+                             bitmap_bytes, cheapest_bytes,
+                             codec_breakdown, codec_bytes,
                              coo_bytes, decode, dense_bytes, encode,
                              encode_leaf, tree_dense_bytes)
 
 __all__ = [
     "LayerPayload", "Payload", "apply_payloads", "bitmap_bytes",
-    "cheapest_bytes", "codec_bytes", "coo_bytes", "decode", "dense_bytes",
-    "encode", "encode_leaf", "tree_dense_bytes",
+    "cheapest_bytes", "codec_breakdown", "codec_bytes", "coo_bytes",
+    "decode", "dense_bytes", "encode", "encode_leaf", "tree_dense_bytes",
 ]

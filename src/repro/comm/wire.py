@@ -142,6 +142,20 @@ def encode(tree, codec: str = "auto") -> Payload:
     return Payload(treedef, tuple(encode_leaf(l, codec) for l in leaves))
 
 
+def codec_breakdown(payloads) -> dict:
+    """Total wire bytes by winning codec over a batch of ``Payload``s.
+
+    Keys are every ``CODECS`` name (zero-filled), so downstream
+    telemetry (repro.obs) gets a stable schema whatever the deltas
+    looked like this round.
+    """
+    out = {c: 0 for c in CODECS}
+    for p in payloads:
+        for lp in p.layers:
+            out[lp.codec] += lp.nbytes
+    return out
+
+
 def decode_leaf(lp: LayerPayload) -> jnp.ndarray:
     if lp.codec == "dense":
         flat = lp.values

@@ -297,6 +297,23 @@ class FedConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Flight-recorder knobs (repro.obs, docs/OBSERVABILITY.md).
+
+    ``device_metrics`` forces on-device per-round telemetry (loss /
+    selected channels / wire bytes accumulated inside the engine
+    programs) even without an active recorder; with a recorder active
+    (``obs.trace.recording``) collection turns on automatically.
+    ``annotate`` wraps fused chunk dispatches in
+    ``jax.profiler.TraceAnnotation`` while recording, so device
+    profiles line up with the host event log.
+    """
+
+    device_metrics: bool = False
+    annotate: bool = True
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     optimizer: str = "sgd"           # sgd | adam | adamw
     learning_rate: float = 1e-3
@@ -315,6 +332,7 @@ class TrainConfig:
     remat: bool = True
     scbf: ScbfConfig = field(default_factory=ScbfConfig)
     fed: FedConfig = field(default_factory=FedConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,7 @@ def masked_bce_loss(params, xb, yb, wb, neuron_masks=None):
 def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
                      y: jnp.ndarray, lr: float, key: jax.Array,
                      batch_size: int = 256, epochs: int = 1,
-                     neuron_masks=None) -> Tuple[dict, ...]:
+                     neuron_masks=None, with_loss: bool = False):
     """SGD over the client shard; returns the updated params.
 
     ``neuron_masks`` (mask-mode SCBFwP) masks pruned hidden neurons out
@@ -46,67 +46,112 @@ def local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
     zero, so the reported delta never touches a pruned coordinate and
     the trained shapes stay run-constant.  ``None`` is the original
     unmasked trace.
+
+    ``with_loss=True`` (device telemetry, repro.obs) returns
+    ``(params, mean_loss)`` instead — the per-step losses via
+    ``value_and_grad``, whose forward value is a byproduct of the
+    reverse pass the plain path already runs, so the parameter
+    trajectory stays bit-identical and no extra forward pass is paid.
     """
     n = (x.shape[0] // batch_size) * batch_size
-    grad_fn = jax.grad(bce_loss)
 
-    def one_epoch(params, key):
+    def one_epoch(carry, key):
+        params, acc = carry
         perm = jax.random.permutation(key, x.shape[0])[:n]
         xb = x[perm].reshape(-1, batch_size, x.shape[1])
         yb = y[perm].reshape(-1, batch_size)
 
-        def step(p, batch):
-            g = grad_fn(p, batch[0], batch[1], neuron_masks)
-            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
-            return p, None
+        if with_loss:
+            vg_fn = jax.value_and_grad(bce_loss)
 
-        params, _ = jax.lax.scan(step, params, (xb, yb))
-        return params, None
+            def step(c, batch):
+                p, a = c
+                loss, g = vg_fn(p, batch[0], batch[1], neuron_masks)
+                p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+                return (p, a + loss), None
+        else:
+            grad_fn = jax.grad(bce_loss)
+
+            def step(c, batch):
+                p, a = c
+                g = grad_fn(p, batch[0], batch[1], neuron_masks)
+                p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+                return (p, a), None
+
+        (params, acc), _ = jax.lax.scan(step, (params, acc), (xb, yb))
+        return (params, acc), None
 
     keys = jax.random.split(key, epochs)
-    params, _ = jax.lax.scan(one_epoch, params, keys)
+    (params, acc), _ = jax.lax.scan(one_epoch, (params, jnp.float32(0.0)),
+                                    keys)
+    if with_loss:
+        steps = max((n // batch_size) * epochs, 1)
+        return params, acc / steps
     return params
 
 
 def masked_local_train_impl(params: Tuple[dict, ...], x: jnp.ndarray,
                             y: jnp.ndarray, w: jnp.ndarray, lr: float,
                             key: jax.Array, batch_size: int = 256,
-                            epochs: int = 1, neuron_masks=None
-                            ) -> Tuple[dict, ...]:
+                            epochs: int = 1, neuron_masks=None,
+                            with_loss: bool = False):
     """``local_train_impl`` with per-example weights (1 real / 0 padding).
 
     Batches are drawn from the padded shard; the weighted-mean loss
     renormalises by the real examples in each batch, so a client whose
     shard is mostly padding still takes correctly-scaled steps (a batch
     of pure padding is a no-op).
+
+    ``with_loss=True`` returns ``(params, mean_loss)`` where the mean
+    is example-weighted across all steps (Σ loss·weight_sum / Σ
+    weight_sum), so padded batches dilute nothing.
     """
     n = (x.shape[0] // batch_size) * batch_size
-    grad_fn = jax.grad(masked_bce_loss)
 
-    def one_epoch(params, key):
+    def one_epoch(carry, key):
+        params, num, den = carry
         perm = jax.random.permutation(key, x.shape[0])[:n]
         xb = x[perm].reshape(-1, batch_size, x.shape[1])
         yb = y[perm].reshape(-1, batch_size)
         wb = w[perm].reshape(-1, batch_size)
 
-        def step(p, batch):
-            g = grad_fn(p, batch[0], batch[1], batch[2], neuron_masks)
-            p = jax.tree_util.tree_map(lambda a, ga: a - lr * ga, p, g)
-            return p, None
+        if with_loss:
+            vg_fn = jax.value_and_grad(masked_bce_loss)
 
-        params, _ = jax.lax.scan(step, params, (xb, yb, wb))
-        return params, None
+            def step(c, batch):
+                p, nu, de = c
+                loss, g = vg_fn(p, batch[0], batch[1], batch[2],
+                                neuron_masks)
+                p = jax.tree_util.tree_map(lambda a, ga: a - lr * ga, p, g)
+                wsum = jnp.sum(batch[2])
+                return (p, nu + loss * wsum, de + wsum), None
+        else:
+            grad_fn = jax.grad(masked_bce_loss)
+
+            def step(c, batch):
+                p, nu, de = c
+                g = grad_fn(p, batch[0], batch[1], batch[2], neuron_masks)
+                p = jax.tree_util.tree_map(lambda a, ga: a - lr * ga, p, g)
+                return (p, nu, de), None
+
+        (params, num, den), _ = jax.lax.scan(step, (params, num, den),
+                                             (xb, yb, wb))
+        return (params, num, den), None
 
     keys = jax.random.split(key, epochs)
-    params, _ = jax.lax.scan(one_epoch, params, keys)
+    init = (params, jnp.float32(0.0), jnp.float32(0.0))
+    (params, num, den), _ = jax.lax.scan(one_epoch, init, keys)
+    if with_loss:
+        return params, num / jnp.maximum(den, 1.0)
     return params
 
 
-local_train = partial(jax.jit, static_argnames=("batch_size", "epochs"))(
+local_train = partial(jax.jit, static_argnames=("batch_size", "epochs",
+                                                "with_loss"))(
     local_train_impl)
 
 masked_local_train = partial(
-    jax.jit, static_argnames=("batch_size", "epochs"))(
+    jax.jit, static_argnames=("batch_size", "epochs", "with_loss"))(
     masked_local_train_impl)
 
 

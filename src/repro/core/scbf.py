@@ -39,7 +39,6 @@ path).  Reshape-mode pruning keeps the per-round path.
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -52,6 +51,8 @@ from repro.core import privacy, pruning
 from repro.data.medical import MedicalCohort, dirichlet_split, federated_split
 from repro.metrics.auc import auc_pr, auc_roc
 from repro.models.mlp_net import init_mlp, mlp_forward
+from repro.obs import metrics as obsm
+from repro.obs import trace as obstrace
 from repro.optim import schedules
 
 
@@ -76,6 +77,13 @@ class LoopRecord:
     # the tighter of the subsampled-amplified and unamplified bounds
     # (both are valid) and this keeps the unamplified one for reference
     epsilon_unamplified: Optional[float] = None
+    # mean per-participant train loss from the on-device telemetry
+    # (repro.obs; None when collection was off this run)
+    train_loss: Optional[float] = None
+    # True on the fused path: ``wall_time`` is chunk wall / rounds — a
+    # fair amortized figure, NOT a per-round measurement (the S rounds
+    # ran as one device program, so no per-round wall exists)
+    wall_is_amortized: bool = False
 
 
 @dataclass
@@ -84,6 +92,10 @@ class RunResult:
     records: List[LoopRecord] = field(default_factory=list)
     dp_delta: Optional[float] = None  # δ of the reported (ε, δ); None: DP off
     final_params: Optional[Tuple] = None  # the trained global model
+    # flight-recorder watchdogs (repro.obs): compile-count deltas, span
+    # and host-offload counters — populated only when the run executed
+    # under an active ``obs.trace.recording`` (None otherwise)
+    telemetry: Optional[dict] = None
 
     @property
     def final(self) -> LoopRecord:
@@ -110,13 +122,43 @@ _mlp_forward_jit = jax.jit(mlp_forward)
 
 
 def _evaluate(params, x, y, batch: int = 8192, neuron_masks=None):
-    scores = []
-    for s in range(0, x.shape[0], batch):
-        scores.append(np.asarray(_mlp_forward_jit(
-            tuple(params), jnp.asarray(x[s:s + batch]), neuron_masks)))
-    sc = jnp.asarray(np.concatenate(scores))
-    yy = jnp.asarray(y)
-    return float(auc_roc(sc, yy)), float(auc_pr(sc, yy))
+    with obstrace.span("eval", examples=int(x.shape[0])):
+        scores = []
+        for s in range(0, x.shape[0], batch):
+            scores.append(np.asarray(_mlp_forward_jit(
+                tuple(params), jnp.asarray(x[s:s + batch]), neuron_masks)))
+        sc = jnp.asarray(np.concatenate(scores))
+        yy = jnp.asarray(y)
+        return float(auc_roc(sc, yy)), float(auc_pr(sc, yy))
+
+
+def _compile_counts():
+    """(scbf, fused) jit-cache sizes for the run_end watchdog delta.
+
+    None when the pinned-jax introspection hook is unavailable — the
+    flight recorder then simply omits the compile counters rather than
+    failing a training run over a diagnostics read.
+    """
+    from repro.fed.engine import fused_compile_count, scbf_compile_count
+    try:
+        return scbf_compile_count(), fused_compile_count()
+    except RuntimeError:
+        return None
+
+
+def _finish_telemetry(result: RunResult, counts0) -> None:
+    """Fold recorder counters + compile deltas into ``RunResult`` and
+    emit the closing ``run_end`` event (no-op when not recording)."""
+    rec = obstrace.get_recorder()
+    if rec is None:
+        return
+    tel = dict(rec.counters)
+    counts1 = _compile_counts()
+    if counts0 is not None and counts1 is not None:
+        tel["scbf_compiles"] = counts1[0] - counts0[0]
+        tel["fused_compiles"] = counts1[1] - counts0[1]
+    result.telemetry = tel
+    rec.event("run_end", **tel)
 
 
 def _partition(cohort: MedicalCohort, train_cfg: TrainConfig):
@@ -304,6 +346,22 @@ def run_federated(cohort: MedicalCohort,
     result = RunResult(method=method + ("wp" if cfg.prune else ""),
                        dp_delta=cfg.dp_delta if dp_on else None)
 
+    # ---- flight recorder (repro.obs, docs/OBSERVABILITY.md) ----
+    # device telemetry turns on under an active recorder or by explicit
+    # config; the compile-count watchdog only samples while recording
+    # (it touches jit caches, and un-recorded runs shouldn't)
+    collect = train_cfg.obs.device_metrics or \
+        obstrace.get_recorder() is not None
+    counts0 = _compile_counts() if obstrace.get_recorder() is not None \
+        else None
+    obstrace.event(
+        "run_start", method=result.method, loops=train_cfg.global_loops,
+        clients=cfg.num_clients, engine=eng.name,
+        fuse_rounds=int(fed.fuse_rounds), mode=fed.mode,
+        dp_sigma=(cfg.dp_noise_multiplier * cfg.dp_clip_norm)
+        if dp_on else None,
+        prune=cfg.prune, prune_impl=cfg.prune_impl if cfg.prune else None)
+
     def _epsilons(loop: int):
         """(epsilon, epsilon_unamplified) for the record of ``loop``."""
         if not dp_on:
@@ -361,85 +419,100 @@ def run_federated(cohort: MedicalCohort,
     if use_fused:
         _run_fused(cohort, train_cfg, method, eng, scheduler, state, key,
                    lrs, dp_releases, result, _epsilons, _metrics, verbose,
-                   pruner)
+                   pruner, collect)
+        _finish_telemetry(result, counts0)
         return result
 
+    prev_eps = 0.0
     for loop in range(train_cfg.global_loops):
-        t0 = time.perf_counter()
-        lr = float(lrs[loop])
-        plan = scheduler.plan(loop, state.version)
-        part = plan.participants
-        P = plan.num_participants
+        # one span is the loop's single wall-clock source: the region it
+        # covers (schedule → train → aggregate → prune) is exactly what
+        # the old hand-rolled perf_counter pair measured — evaluation
+        # stays outside, as before
+        with obstrace.span("round", loop=loop) as sp:
+            lr = float(lrs[loop])
+            plan = scheduler.plan(loop, state.version)
+            part = plan.participants
+            P = plan.num_participants
 
-        key, ckeys, skeys, dp_keys = _derive_round_keys(
-            key, cfg.num_clients, part, P)
+            key, ckeys, skeys, dp_keys = _derive_round_keys(
+                key, cfg.num_clients, part, P)
 
-        payloads, stats = [], []
-        if P:
+            payloads, stats, dm = [], [], None
+            if P:
+                if fed.mode == "fedbuff":
+                    params_for = [history[state.version - int(tau)]
+                                  for tau in plan.staleness]
+                else:
+                    params_for = state.params
+                if method == "scbf":
+                    nmasks = pruner.masks if pruner is not None else None
+                    keep_eff = pruner.emission_keep if pruner is not None \
+                        else None
+                    out = eng.scbf_round(
+                        params_for, part, lr, ckeys, skeys, dp_keys, cfg,
+                        nmasks=nmasks, keep=keep_eff, collect=collect)
+                    (payloads, stats, dm) = out if collect else \
+                        (out[0], out[1], None)
+                    dp_releases[np.asarray(part)] += 1
+                    # mask mode ships effective-geometry payloads; the
+                    # server stores full geometry, so aggregation applies
+                    # the expanded (index-remapped) view
+                    agg_payloads = payloads if keep_eff is None else \
+                        pruning.expand_payloads(payloads, keep_eff,
+                                                state.params)
+                    contrib = RoundContribution(
+                        num_examples=eng.counts[np.asarray(part)],
+                        staleness=plan.staleness, payloads=agg_payloads)
+                else:
+                    out = eng.fedavg_round(params_for, part, lr, ckeys,
+                                           collect=collect)
+                    (client_params, counts, dm) = out if collect else \
+                        (out[0], out[1], None)
+                    contrib = RoundContribution(
+                        num_examples=counts, staleness=plan.staleness,
+                        client_params=client_params)
+                state = strategy.aggregate(state, contrib)
+            params = state.params
             if fed.mode == "fedbuff":
-                params_for = [history[state.version - int(tau)]
-                              for tau in plan.staleness]
-            else:
-                params_for = state.params
+                history[state.version] = params
+                live = scheduler.referenced_versions() | {state.version}
+                history = {v: p for v, p in history.items() if v in live}
+
+            # ---- communication accounting ----
             if method == "scbf":
-                nmasks = pruner.masks if pruner is not None else None
-                keep_eff = pruner.emission_keep if pruner is not None \
-                    else None
-                payloads, stats = eng.scbf_round(
-                    params_for, part, lr, ckeys, skeys, dp_keys, cfg,
-                    nmasks=nmasks, keep=keep_eff)
-                dp_releases[np.asarray(part)] += 1
-                # mask mode ships effective-geometry payloads; the
-                # server stores full geometry, so aggregation applies
-                # the expanded (index-remapped) view
-                agg_payloads = payloads if keep_eff is None else \
-                    pruning.expand_payloads(payloads, keep_eff,
-                                            state.params)
-                contrib = RoundContribution(
-                    num_examples=eng.counts[np.asarray(part)],
-                    staleness=plan.staleness, payloads=agg_payloads)
+                up_frac = float(np.mean([s.upload_fraction
+                                         for s in stats])) if stats else 0.0
+                # measured bytes of the encoded payloads (single source
+                # of truth: repro.comm.wire), not a mask-count model
+                sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
+                    if payloads else 0
+                dense_bytes = int(np.sum([p.dense_nbytes
+                                          for p in payloads])) \
+                    if payloads else 0
             else:
-                client_params, counts = eng.fedavg_round(params_for, part,
-                                                         lr, ckeys)
-                contrib = RoundContribution(
-                    num_examples=counts, staleness=plan.staleness,
-                    client_params=client_params)
-            state = strategy.aggregate(state, contrib)
-        params = state.params
-        if fed.mode == "fedbuff":
-            history[state.version] = params
-            live = scheduler.referenced_versions() | {state.version}
-            history = {v: p for v, p in history.items() if v in live}
+                total = sum(int(np.prod(l["w"].shape))
+                            + int(l["b"].shape[0]) for l in params)
+                up_frac = 1.0 if P else 0.0
+                dense_bytes = total * 4 * P
+                sparse_bytes = dense_bytes
 
-        # ---- communication accounting ----
-        if method == "scbf":
-            up_frac = float(np.mean([s.upload_fraction for s in stats])) \
-                if stats else 0.0
-            # measured bytes of the encoded payloads (single source of
-            # truth: repro.comm.wire), not a mask-count model
-            sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
-                if payloads else 0
-            dense_bytes = int(np.sum([p.dense_nbytes for p in payloads])) \
-                if payloads else 0
-        else:
-            total = sum(int(np.prod(l["w"].shape)) + int(l["b"].shape[0])
-                        for l in params)
-            up_frac = 1.0 if P else 0.0
-            dense_bytes = total * 4 * P
-            sparse_bytes = dense_bytes
+            # ---- pruning (SCBFwP / FAwP) ----
+            if pruner is not None and pruner.active:
+                # reshape: returns the compacted pytree; mask: updates
+                # the keep-masks in place and returns params unchanged
+                params = pruner.step(params)
+                state = dataclasses.replace(state, params=params)
+                obstrace.event("prune", loop=loop,
+                               hidden=list(pruner.hidden_sizes()))
+            if pruner is not None and pruner.should_compact:
+                # mask mode, budget exhausted: one-shot compaction
+                params = pruner.compact(params)
+                state = dataclasses.replace(state, params=params)
+                obstrace.event("compact", loop=loop,
+                               hidden=list(pruner.hidden_sizes()))
 
-        # ---- pruning (SCBFwP / FAwP) ----
-        if pruner is not None and pruner.active:
-            # reshape: returns the compacted pytree; mask: updates the
-            # keep-masks in place and returns params unchanged
-            params = pruner.step(params)
-            state = dataclasses.replace(state, params=params)
-        if pruner is not None and pruner.should_compact:
-            # mask mode, budget exhausted: one-shot physical compaction
-            params = pruner.compact(params)
-            state = dataclasses.replace(state, params=params)
-
-        wall = time.perf_counter() - t0
+        wall = sp.elapsed
         roc, pr, evaluated = _metrics(
             params, _should_eval(loop, train_cfg.global_loops,
                                  train_cfg.eval_every),
@@ -462,21 +535,63 @@ def run_federated(cohort: MedicalCohort,
             flops_proxy=float(n_params) * cohort.x_train.shape[0],
             hidden_sizes=hidden,
             num_participants=P,
-            epsilon=eps, evaluated=evaluated, epsilon_unamplified=eps_un)
+            epsilon=eps, evaluated=evaluated, epsilon_unamplified=eps_un,
+            train_loss=dm.get("train_loss") if dm else None)
         result.records.append(rec)
+        obstrace.event("round", **_round_event_fields(
+            rec, plan, pruner, dm, eps_step=(eps - prev_eps)
+            if eps is not None else None))
+        prev_eps = eps if eps is not None else 0.0
         if verbose:
             print(f"[{result.method}] loop {loop:02d} "
                   f"auc_roc={roc:.4f} auc_pr={pr:.4f} "
                   f"upload={up_frac:.2%} hidden={rec.hidden_sizes} "
                   f"clients={P} t={wall:.2f}s")
     result.final_params = params
+    _finish_telemetry(result, counts0)
     return result
+
+
+def _round_event_fields(rec: LoopRecord, plan, pruner, dm,
+                        eps_step=None) -> dict:
+    """The ``round`` event's field dict (docs/OBSERVABILITY.md schema).
+
+    One builder for both loop shapes so the per-round and fused paths
+    emit identical event structure: LoopRecord scalars + scheduler
+    telemetry (sampled/dropped/stragglers/staleness) + keep-mask density
+    + the on-device metrics dict when collection was on.
+    """
+    out = {
+        "loop": rec.loop, "participants": rec.num_participants,
+        "upload_fraction": round(rec.upload_fraction, 6),
+        "sparse_bytes": rec.sparse_bytes, "dense_bytes": rec.dense_bytes,
+        "wall": round(rec.wall_time, 6),
+        "wall_is_amortized": rec.wall_is_amortized,
+        "hidden": list(rec.hidden_sizes),
+        "evaluated": rec.evaluated,
+    }
+    if rec.epsilon is not None:
+        out["epsilon"] = rec.epsilon
+        if eps_step is not None:
+            out["epsilon_step"] = eps_step
+    if pruner is not None:
+        out["keep_density"] = round(
+            sum(pruner.hidden_sizes()) / max(pruner.original_hidden, 1),
+            6)
+    if plan is not None and hasattr(plan, "telemetry"):
+        out.update(plan.telemetry())
+    if dm:
+        for k in ("train_loss", "selected", "codec_bytes"):
+            if dm.get(k) is not None:
+                out[k] = dm[k]
+    return out
 
 
 def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                eng, scheduler, state, key, lrs: np.ndarray,
                dp_releases: np.ndarray, result: RunResult,
-               _epsilons, _metrics, verbose: bool, pruner=None) -> None:
+               _epsilons, _metrics, verbose: bool, pruner=None,
+               collect: bool = False) -> None:
     """The fused round loop: S sync rounds per device program.
 
     Each chunk is pre-planned into static (S, B) participant/validity
@@ -532,61 +647,95 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                  pruner.masks if pruner is not None else None)
 
     loop0 = 0
+    prev_eps = 0.0
     while loop0 < total_loops:
-        t0 = time.perf_counter()
         prune_active = pruner is not None and pruner.active
         chunk = fused_chunk_len(total_loops - loop0, S, prune_active)
-        plans = scheduler.plan_horizon(loop0, chunk, state.version)
-        parts, cks, sks, dks, wts = [], [], [], [], []
-        for plan in plans:
-            part = plan.participants
-            P = plan.num_participants
-            # _derive_round_keys is the single key-stream contract, so
-            # the fused pre-planner consumes EXACTLY what the per-round
-            # loop would have
-            key, ck, sk, dk = _derive_round_keys(key, cfg.num_clients,
-                                                 part, P)
-            cks.append(np.asarray(ck))
-            sks.append(np.asarray(sk))
-            dks.append(np.asarray(dk))
-            parts.append(part)
-            if method == "fedavg":
-                if P:
-                    n = eng.counts[np.asarray(part)].astype(np.float64)
-                    wts.append((n / n.sum()).astype(np.float32))
+        # the chunk span replaces the hand-rolled perf_counter pair: it
+        # covers plan → keys → chunk dispatch → emit → prune, and (while
+        # recording) annotates the region in device profiles so
+        # jax.profiler traces line up with the event log
+        with obstrace.span("fused_chunk", annotate=train_cfg.obs.annotate,
+                           loop0=loop0, rounds=chunk) as sp:
+            plans = scheduler.plan_horizon(loop0, chunk, state.version)
+            parts, cks, sks, dks, wts = [], [], [], [], []
+            for plan in plans:
+                part = plan.participants
+                P = plan.num_participants
+                # _derive_round_keys is the single key-stream contract,
+                # so the fused pre-planner consumes EXACTLY what the
+                # per-round loop would have
+                key, ck, sk, dk = _derive_round_keys(key, cfg.num_clients,
+                                                     part, P)
+                cks.append(np.asarray(ck))
+                sks.append(np.asarray(sk))
+                dks.append(np.asarray(dk))
+                parts.append(part)
+                if method == "fedavg":
+                    if P:
+                        n = eng.counts[np.asarray(part)].astype(np.float64)
+                        wts.append((n / n.sum()).astype(np.float32))
+                    else:
+                        wts.append(np.zeros(0, np.float32))
+            keep_eff = pruner.emission_keep if pruner is not None else None
+            eff = obsm.effective_leaf_sizes(state.params, keep_eff) \
+                if (collect and method == "scbf" and keep_eff is not None) \
+                else None
+            fplan = eng.prepare_fused_plan(
+                parts, lrs[loop0:loop0 + chunk], cks, sks, dks,
+                horizon=1 if prune_active else S, num_slots=B,
+                weights=wts if method == "fedavg" else None,
+                eff_sizes=eff)
+            round_metrics = None
+            if method == "scbf":
+                out = eng.fused_scbf_chunk(
+                    state.params, fplan, cfg,
+                    nmasks=pruner.masks if pruner is not None else None,
+                    collect=collect)
+                if collect:
+                    new_params, masked_s, masks_s, met_s = out
                 else:
-                    wts.append(np.zeros(0, np.float32))
-        fplan = eng.prepare_fused_plan(
-            parts, lrs[loop0:loop0 + chunk], cks, sks, dks,
-            horizon=1 if prune_active else S, num_slots=B,
-            weights=wts if method == "fedavg" else None)
-        if method == "scbf":
-            new_params, masked_s, masks_s = eng.fused_scbf_chunk(
-                state.params, fplan, cfg,
-                nmasks=pruner.masks if pruner is not None else None)
-            emitted = eng.emit_fused_payloads(
-                masked_s, masks_s, fplan,
-                keep=pruner.emission_keep if pruner is not None else None)
-        else:
-            new_params = eng.fused_fedavg_chunk(state.params, fplan)
-            emitted = [([], [])] * chunk
-        applied = sum(1 for p in plans if p.num_participants)
-        state = dataclasses.replace(state, params=new_params,
-                                    version=state.version + applied)
-        if prune_active:
-            # chunk boundary == per-round cadence while pruning (chunks
-            # are 1 round long): APoZ on device, mask update on host
-            pruner.step(state.params)
-            if pruner.should_compact:
-                state = dataclasses.replace(
-                    state, params=pruner.compact(state.params))
-        wall_each = (time.perf_counter() - t0) / chunk
+                    new_params, masked_s, masks_s = out
+                emitted = eng.emit_fused_payloads(
+                    masked_s, masks_s, fplan, keep=keep_eff)
+                if collect:
+                    # the chunk-boundary offload: ONE device_get for the
+                    # whole chunk's telemetry, alongside the payload pull
+                    round_metrics = obsm.offload(met_s,
+                                                 rounds=fplan.rounds)
+            else:
+                out = eng.fused_fedavg_chunk(state.params, fplan,
+                                             collect=collect)
+                if collect:
+                    new_params, met_s = out
+                    round_metrics = obsm.offload(met_s,
+                                                 rounds=fplan.rounds)
+                else:
+                    new_params = out
+                emitted = [([], [])] * chunk
+            applied = sum(1 for p in plans if p.num_participants)
+            state = dataclasses.replace(state, params=new_params,
+                                        version=state.version + applied)
+            if prune_active:
+                # chunk boundary == per-round cadence while pruning
+                # (chunks are 1 round long): APoZ on device, mask update
+                # on host
+                pruner.step(state.params)
+                obstrace.event("prune", loop=loop0,
+                               hidden=list(pruner.hidden_sizes()))
+                if pruner.should_compact:
+                    state = dataclasses.replace(
+                        state, params=pruner.compact(state.params))
+                    obstrace.event("compact", loop=loop0,
+                                   hidden=list(pruner.hidden_sizes()))
+        wall_each = sp.elapsed / chunk
 
         n_params, hidden = _model_stats()
         for r, plan in enumerate(plans):
             loop = loop0 + r
             P = plan.num_participants
             payloads, stats = emitted[r]
+            dm = round_metrics[r] if round_metrics is not None else None
             if method == "scbf":
                 up_frac = float(np.mean([s.upload_fraction
                                          for s in stats])) if stats else 0.0
@@ -615,8 +764,15 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                 flops_proxy=float(n_params) * cohort.x_train.shape[0],
                 hidden_sizes=hidden, num_participants=P,
                 epsilon=eps, evaluated=evaluated,
-                epsilon_unamplified=eps_un)
+                epsilon_unamplified=eps_un,
+                train_loss=(dm or {}).get("train_loss")
+                if (dm and P) else None,
+                wall_is_amortized=True)
             result.records.append(rec)
+            obstrace.event("round", **_round_event_fields(
+                rec, plan, pruner, dm if P else None,
+                eps_step=(eps - prev_eps) if eps is not None else None))
+            prev_eps = eps if eps is not None else 0.0
             if verbose:
                 print(f"[{result.method}] loop {loop:02d} "
                       f"auc_roc={roc:.4f} auc_pr={pr:.4f} "

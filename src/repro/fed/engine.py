@@ -71,6 +71,8 @@ from repro.core.client import (client_delta, local_train, local_train_impl,
 from repro.fed.cohort import (PaddedCohort, bucket_size, horizon_slot_plan,
                               pad_clients)
 from repro.fed.strategy import fedavg_step, scbf_sum_step
+from repro.obs import metrics as obsm
+from repro.obs import trace as obstrace
 
 
 def stack_pytrees(trees: Sequence):
@@ -90,10 +92,10 @@ def _reveal_masks(masked, masks):
                  for layer_delta, layer_masks in zip(masked, masks))
 
 
-def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nm, *, batch_size: int,
-               epochs: int, masked_loss: bool, upload_rate: float,
-               selection_mode: str, score_norm: bool, dp_noise: float,
-               dp_clip: float):
+def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nm, es=None, *,
+               batch_size: int, epochs: int, masked_loss: bool,
+               upload_rate: float, selection_mode: str, score_norm: bool,
+               dp_noise: float, dp_clip: float, collect: bool = False):
     """Train + delta + channel-select (+ DP) for ONE cohort slot.
 
     The single traced body shared by the per-round pass and the fused
@@ -104,15 +106,25 @@ def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nm, *, batch_size: int,
     keep-mask tuple (mask-mode pruning): pruned neurons drop out of
     training, selection and DP at static shape; ``None`` traces the
     original unmasked program.
+
+    ``collect=True`` (repro.obs device telemetry) additionally returns
+    this slot's ``MetricsCarry`` — the loss comes from the training
+    reverse pass (``with_loss``) and the byte/channel counts from the
+    already-zeroed ``masked``/``masks``, so the parameter math is
+    untouched and stays bit-identical.  ``es`` is the optional
+    effective-geometry leaf-size vector (mask-mode SCBFwP byte pricing).
     """
+    loss = None
     if masked_loss:
-        new_p = masked_local_train_impl(p, x, y, w, lr, ck,
-                                        batch_size=batch_size,
-                                        epochs=epochs, neuron_masks=nm)
+        tr = masked_local_train_impl(p, x, y, w, lr, ck,
+                                     batch_size=batch_size,
+                                     epochs=epochs, neuron_masks=nm,
+                                     with_loss=collect)
     else:
-        new_p = local_train_impl(p, x, y, lr, ck,
-                                 batch_size=batch_size, epochs=epochs,
-                                 neuron_masks=nm)
+        tr = local_train_impl(p, x, y, lr, ck,
+                              batch_size=batch_size, epochs=epochs,
+                              neuron_masks=nm, with_loss=collect)
+    new_p, loss = tr if collect else (tr, None)
     g = client_delta(p, new_p)
     masked, masks, _ = sel.select_gradients(
         g, upload_rate, selection_mode, key=sk, score_norm=score_norm,
@@ -125,20 +137,24 @@ def _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nm, *, batch_size: int,
                     for k, t in layer.items()} for layer in masked)
     masks = tuple({k: (None if m is None else jnp.logical_and(m, v))
                    for k, m in layer.items()} for layer in masks)
+    if collect:
+        return masked, masks, obsm.slot_metrics(loss, masked, masks, v,
+                                                eff_sizes=es)
     return masked, masks
 
 
 @partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss",
                                    "stacked_params", "upload_rate",
                                    "selection_mode", "score_norm",
-                                   "dp_noise", "dp_clip", "spmd_axis"))
+                                   "dp_noise", "dp_clip", "spmd_axis",
+                                   "collect"))
 def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid,
-               nmasks=None, *,
+               nmasks=None, eff_sizes=None, *,
                batch_size: int, epochs: int, masked_loss: bool,
                stacked_params: bool, upload_rate: float,
                selection_mode: str, score_norm: bool,
                dp_noise: float, dp_clip: float,
-               spmd_axis: Optional[str] = None):
+               spmd_axis: Optional[str] = None, collect: bool = False):
     """``_slot_pass`` for B slots in one vmap.
 
     ``params`` is either one shared pytree (sync rounds) or a B-stacked
@@ -146,30 +162,37 @@ def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid,
     version).  ``nmasks`` (mask-mode SCBFwP) is one keep-mask tuple
     shared by every slot.  ``spmd_axis`` names the mesh axis the slot
     dimension is sharded over (None = single device).  Returns
-    (masked_deltas, masks), both B-stacked.
+    (masked_deltas, masks), both B-stacked — plus the round's reduced
+    ``MetricsCarry`` when ``collect`` (``eff_sizes``: shared
+    effective-geometry byte pricing, closed over, not vmapped).
     """
     p_ax = 0 if stacked_params else None
 
     def one(p, x, y, w, ck, sk, dk, v):
-        return _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nmasks,
+        return _slot_pass(p, x, y, w, lr, ck, sk, dk, v, nmasks, eff_sizes,
                           batch_size=batch_size, epochs=epochs,
                           masked_loss=masked_loss, upload_rate=upload_rate,
                           selection_mode=selection_mode,
                           score_norm=score_norm, dp_noise=dp_noise,
-                          dp_clip=dp_clip)
+                          dp_clip=dp_clip, collect=collect)
 
-    return jax.vmap(one, in_axes=(p_ax, 0, 0, 0, 0, 0, 0, 0),
-                    spmd_axis_name=spmd_axis)(
+    out = jax.vmap(one, in_axes=(p_ax, 0, 0, 0, 0, 0, 0, 0),
+                   spmd_axis_name=spmd_axis)(
         params, xs, ys, ws, ckeys, skeys, dp_keys, valid)
+    if collect:
+        masked, masks, slot_m = out
+        return masked, masks, obsm.reduce_slots(slot_m)
+    return out
 
 
 def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
-                       ckeys, skeys, dp_keys, nmasks=None, *,
-                       batch_size: int,
+                       ckeys, skeys, dp_keys, nmasks=None, eff_sizes=None,
+                       *, batch_size: int,
                        epochs: int, masked_loss: bool, upload_rate: float,
                        selection_mode: str, score_norm: bool,
                        dp_noise: float, dp_clip: float,
-                       spmd_axis: Optional[str] = None):
+                       spmd_axis: Optional[str] = None,
+                       collect: bool = False):
     """S whole SCBF rounds as ONE device program (the fused round loop).
 
     ``lax.scan`` over the round axis: each step gathers its cohort from
@@ -184,7 +207,10 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
     single-round chunks while pruning is still removing neurons, so a
     chunk never spans a mask update).  Returns
     (new_params, masked_deltas, masks) with the latter two stacked
-    ``(S, B, ...)`` for off-critical-path wire encoding.
+    ``(S, B, ...)`` for off-critical-path wire encoding — plus the
+    ``(S,)``-stacked per-round ``MetricsCarry`` when ``collect``
+    (repro.obs device telemetry; the carry rides the scan ys, so the
+    parameter math and the host-transfer discipline are untouched).
     """
     def round_body(p, rnd):
         idx, v, lr, ck, sk, dk = rnd
@@ -192,29 +218,40 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
 
         def one(x, y, w, c, s, d, vv):
             return _slot_pass(p, x, y, w, lr, c, s, d, vv, nmasks,
+                              eff_sizes,
                               batch_size=batch_size, epochs=epochs,
                               masked_loss=masked_loss,
                               upload_rate=upload_rate,
                               selection_mode=selection_mode,
                               score_norm=score_norm, dp_noise=dp_noise,
-                              dp_clip=dp_clip)
+                              dp_clip=dp_clip, collect=collect)
 
-        masked, masks = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0),
-                                 spmd_axis_name=spmd_axis)(
+        out = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, 0),
+                       spmd_axis_name=spmd_axis)(
             xs, ys, ws, ck, sk, dk, v)
-        return scbf_sum_step(p, masked, neuron_masks=nmasks), \
-            (masked, masks)
+        if collect:
+            masked, masks, slot_m = out
+            ys_out = (masked, masks, obsm.reduce_slots(slot_m))
+        else:
+            masked, masks = out
+            ys_out = (masked, masks)
+        return scbf_sum_step(p, masked, neuron_masks=nmasks), ys_out
 
-    new_p, (masked_s, masks_s) = jax.lax.scan(
+    new_p, ys_s = jax.lax.scan(
         round_body, tuple(params),
         (part_idx, valid, lrs, ckeys, skeys, dp_keys))
+    if collect:
+        masked_s, masks_s, met_s = ys_s
+        return new_p, masked_s, masks_s, met_s
+    masked_s, masks_s = ys_s
     return new_p, masked_s, masks_s
 
 
 def _fused_fedavg_rounds(params, x_all, y_all, w_all, part_idx, weights,
                          lrs, ckeys, *, batch_size: int, epochs: int,
                          masked_loss: bool,
-                         spmd_axis: Optional[str] = None):
+                         spmd_axis: Optional[str] = None,
+                         collect: bool = False):
     """S whole FedAvg rounds as one device program.
 
     Like ``_fused_scbf_rounds`` but full-weight: each scan step trains
@@ -222,7 +259,9 @@ def _fused_fedavg_rounds(params, x_all, y_all, w_all, part_idx, weights,
     (``strategy.fedavg_step``; ``weights`` carries exact zeros on
     invalid slots, and an all-zero round keeps the carry unchanged).
     FedAvg ships dense weights, so nothing per-round needs to reach the
-    host — only the final model is returned.
+    host — only the final model is returned, plus the ``(S,)``-stacked
+    ``FedAvgMetrics`` (loss / participant counts, slot validity derived
+    from the zero-weight convention) when ``collect``.
     """
     def round_body(p, rnd):
         idx, wts, lr, ck = rnd
@@ -232,16 +271,29 @@ def _fused_fedavg_rounds(params, x_all, y_all, w_all, part_idx, weights,
             if masked_loss:
                 return masked_local_train_impl(p, x, y, w, lr, k,
                                                batch_size=batch_size,
-                                               epochs=epochs)
+                                               epochs=epochs,
+                                               with_loss=collect)
             return local_train_impl(p, x, y, lr, k,
-                                    batch_size=batch_size, epochs=epochs)
+                                    batch_size=batch_size, epochs=epochs,
+                                    with_loss=collect)
 
-        new_stack = jax.vmap(one, in_axes=(0, 0, 0, 0),
-                             spmd_axis_name=spmd_axis)(xs, ys, ws, ck)
-        return fedavg_step(p, new_stack, wts), None
+        out = jax.vmap(one, in_axes=(0, 0, 0, 0),
+                       spmd_axis_name=spmd_axis)(xs, ys, ws, ck)
+        if collect:
+            new_stack, losses = out
+            valid = wts > 0.0
+            met = obsm.FedAvgMetrics(
+                loss_sum=jnp.sum(jnp.where(valid, losses, 0.0)
+                                 ).astype(jnp.float32),
+                participants=jnp.sum(valid).astype(jnp.int32))
+        else:
+            new_stack, met = out, None
+        return fedavg_step(p, new_stack, wts), met
 
-    new_p, _ = jax.lax.scan(round_body, tuple(params),
-                            (part_idx, weights, lrs, ckeys))
+    new_p, met_s = jax.lax.scan(round_body, tuple(params),
+                                (part_idx, weights, lrs, ckeys))
+    if collect:
+        return new_p, met_s
     return new_p
 
 
@@ -261,32 +313,35 @@ def _fused_programs():
                    static_argnames=("batch_size", "epochs", "masked_loss",
                                     "upload_rate", "selection_mode",
                                     "score_norm", "dp_noise", "dp_clip",
-                                    "spmd_axis"),
+                                    "spmd_axis", "collect"),
                    donate_argnums=donate)(_fused_scbf_rounds)
     fedavg = partial(jax.jit,
                      static_argnames=("batch_size", "epochs", "masked_loss",
-                                      "spmd_axis"),
+                                      "spmd_axis", "collect"),
                      donate_argnums=donate)(_fused_fedavg_rounds)
     return scbf, fedavg
 
 
 @partial(jax.jit, static_argnames=("batch_size", "epochs", "masked_loss",
-                                   "spmd_axis"))
+                                   "spmd_axis", "collect"))
 def _fedavg_pass(params, xs, ys, ws, lr, ckeys, *,
                  batch_size: int, epochs: int, masked_loss: bool,
-                 spmd_axis: Optional[str] = None):
+                 spmd_axis: Optional[str] = None, collect: bool = False):
     """Full-weight local training for B slots in one vmap.
 
     Padded slots need no validity gating here: their trained params are
-    per-slot outputs that ``fedavg_round`` simply never reads.
+    per-slot outputs that ``fedavg_round`` simply never reads (and with
+    ``collect`` the caller slices the loss vector to real slots).
     """
     def one(p, x, y, w, ck):
         if masked_loss:
             return masked_local_train_impl(p, x, y, w, lr, ck,
                                            batch_size=batch_size,
-                                           epochs=epochs)
+                                           epochs=epochs,
+                                           with_loss=collect)
         return local_train_impl(p, x, y, lr, ck,
-                                batch_size=batch_size, epochs=epochs)
+                                batch_size=batch_size, epochs=epochs,
+                                with_loss=collect)
 
     return jax.vmap(one, in_axes=(None, 0, 0, 0, 0),
                     spmd_axis_name=spmd_axis)(params, xs, ys, ws, ckeys)
@@ -353,14 +408,31 @@ def _emit_payloads(masked_stacked, masks_stacked, num: int, keep=None
     pass are padding (already zeroed by the validity mask) and are never
     encoded — padded slots ship zero bytes.
     """
-    masked_host = jax.device_get(masked_stacked)
-    masks_host = jax.device_get(masks_stacked)
-    payloads, stats = [], []
-    for i in range(num):
-        payload, st = _encode_slot(masked_host, masks_host, (i,), keep)
-        payloads.append(payload)
-        stats.append(st)
-    return payloads, stats
+    with obstrace.span("encode", clients=num):
+        masked_host = jax.device_get(masked_stacked)
+        masks_host = jax.device_get(masks_stacked)
+        payloads, stats = [], []
+        for i in range(num):
+            payload, st = _encode_slot(masked_host, masks_host, (i,), keep)
+            payloads.append(payload)
+            stats.append(st)
+        return payloads, stats
+
+
+def _host_round_metrics(payloads, stats, losses):
+    """Sequential-path round telemetry, same dict shape as
+    ``obsm.offload``.
+
+    The reference engine already has everything on the host, so its
+    numbers come straight from the encoded payloads (``repro.comm.wire``
+    stays the byte source of truth) instead of a device carry.
+    """
+    return {
+        "participants": len(payloads),
+        "train_loss": (sum(losses) / len(losses)) if losses else 0.0,
+        "sparse_bytes": int(sum(p.nbytes for p in payloads)),
+        "codec_bytes": wire.codec_breakdown(payloads),
+    }
 
 
 @dataclass
@@ -383,6 +455,9 @@ class FusedPlan:
     skeys: jnp.ndarray                # (S, B, 2) selection keys
     dp_keys: jnp.ndarray              # (S, B, 2) DP noise keys
     weights: Optional[jnp.ndarray] = None   # (S, B) f32 — fedavg only
+    eff_sizes: Optional[jnp.ndarray] = None  # (n_leaves,) i32 — obs byte
+    # pricing under mask-mode SCBFwP (device-placed at plan build so the
+    # chunk stays transfer-free); None prices full leaf sizes statically
 
 
 def _pad_slots(arr, num_slots: int):
@@ -474,7 +549,8 @@ class BatchedEngine:
         return b, out, params, valid
 
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
-                   cfg: ScbfConfig, nmasks=None, keep=None):
+                   cfg: ScbfConfig, nmasks=None, keep=None,
+                   collect: bool = False):
         """Masked sparse uploads for every participant, one batched pass.
 
         ``params``: one pytree (sync) or a list of per-participant
@@ -482,11 +558,12 @@ class BatchedEngine:
         mask-mode SCBFwP neuron keep-masks (device tuple threaded into
         the pass) and kept-index sets (host, for effective-geometry
         emission).  An empty round returns ``([], [])`` without
-        dispatching a P=0 program.
+        dispatching a P=0 program.  ``collect`` (repro.obs) appends the
+        round's offloaded device-telemetry dict to the return tuple.
         """
         p_count = len(participants)
         if not p_count:
-            return [], []
+            return ([], [], None) if collect else ([], [])
         xs, ys, ws = self._gather(participants)
         stacked = isinstance(params, list)
         p = stack_pytrees(params) if stacked else tuple(params)
@@ -501,27 +578,40 @@ class BatchedEngine:
             p = jax.device_put(p, self._repl_sharding)
         if nmasks is not None and self.mesh is not None:
             nmasks = jax.device_put(tuple(nmasks), self._mask_sharding)
+        eff = None
+        if collect and keep is not None:
+            ref = params[0] if stacked else params
+            eff = jnp.asarray(obsm.effective_leaf_sizes(ref, keep))
         with self._mesh_ctx():
-            masked, masks = _scbf_pass(
-                p, xs, ys, ws, lr, ck, sk, dk, valid, nmasks,
+            out = _scbf_pass(
+                p, xs, ys, ws, lr, ck, sk, dk, valid, nmasks, eff,
                 batch_size=self.batch_size, epochs=self.epochs,
                 masked_loss=not self.cohort.uniform, stacked_params=stacked,
                 upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
                 score_norm=cfg.score_norm, dp_noise=cfg.dp_noise_multiplier,
-                dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis)
+                dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis,
+                collect=collect)
+        if collect:
+            masked, masks, met = out
+            payloads, stats = _emit_payloads(masked, masks, p_count, keep)
+            return payloads, stats, obsm.offload(met)
+        masked, masks = out
         return _emit_payloads(masked, masks, p_count, keep)
 
-    def fedavg_round(self, params, participants, lr, ckeys):
+    def fedavg_round(self, params, participants, lr, ckeys,
+                     collect: bool = False):
         """Full-weight training; returns (per-client params list, counts).
 
         Training runs stacked in one vmap; the returned list holds
         per-client views into that output so the aggregation strategy
         can reduce incrementally (core.server.fedavg_update).  Padded
-        bucket slots are simply never read.
+        bucket slots are simply never read.  ``collect`` appends the
+        loss-only device-telemetry dict.
         """
         p_count = len(participants)
         if not p_count:
-            return [], self.counts[:0]
+            return ([], self.counts[:0], None) if collect \
+                else ([], self.counts[:0])
         xs, ys, ws = self._gather(participants)
         p = tuple(params)
         _, (xs, ys, ws, ck), _, _ = self._bucketed_inputs(
@@ -529,14 +619,23 @@ class BatchedEngine:
         if self.mesh is not None:
             p = jax.device_put(p, self._repl_sharding)
         with self._mesh_ctx():
-            new_p = _fedavg_pass(p, xs, ys, ws, lr, ck,
-                                 batch_size=self.batch_size,
-                                 epochs=self.epochs,
-                                 masked_loss=not self.cohort.uniform,
-                                 spmd_axis=self.spmd_axis)
-        out = [jax.tree_util.tree_map(lambda l, i=i: l[i], new_p)
+            out = _fedavg_pass(p, xs, ys, ws, lr, ck,
+                               batch_size=self.batch_size,
+                               epochs=self.epochs,
+                               masked_loss=not self.cohort.uniform,
+                               spmd_axis=self.spmd_axis, collect=collect)
+        if collect:
+            new_p, losses = out
+            met = obsm.FedAvgMetrics(
+                loss_sum=jnp.sum(losses[:p_count]).astype(jnp.float32),
+                participants=jnp.int32(p_count))
+            dm = obsm.offload(met)
+        else:
+            new_p = out
+        res = [jax.tree_util.tree_map(lambda l, i=i: l[i], new_p)
                for i in range(p_count)]
-        return out, self.counts[np.asarray(participants)]
+        counts = self.counts[np.asarray(participants)]
+        return (res, counts, dm) if collect else (res, counts)
 
     # ------------------------------------------------------------------
     # fused execution: S whole rounds per device program
@@ -557,7 +656,8 @@ class BatchedEngine:
                            lrs: Sequence[float],
                            ckeys: Sequence, skeys: Sequence,
                            dp_keys: Sequence, horizon: int,
-                           num_slots: int, weights=None) -> FusedPlan:
+                           num_slots: int, weights=None,
+                           eff_sizes=None) -> FusedPlan:
         """Assemble + device-place one chunk's static (S, B) plan.
 
         Per-round key rows pad by repeating slot 0 and a short tail
@@ -613,18 +713,23 @@ class BatchedEngine:
                                     self._repl_sharding)
             wts_dev = None if wts is None else \
                 jax.device_put(jnp.asarray(wts), self._fused_slot_sharding)
+            eff_dev = None if eff_sizes is None else jax.device_put(
+                jnp.asarray(eff_sizes, jnp.int32), self._repl_sharding)
         else:
             dev = {k: jnp.asarray(v) for k, v in arrs.items()}
             lr_dev = jnp.asarray(lr_arr)
             wts_dev = None if wts is None else jnp.asarray(wts)
+            eff_dev = None if eff_sizes is None else \
+                jnp.asarray(eff_sizes, jnp.int32)
         return FusedPlan(rounds=len(parts), num_slots=num_slots,
                          participants=parts, part_idx=dev["part_idx"],
                          valid=dev["valid"], lrs=lr_dev,
                          ckeys=dev["ckeys"], skeys=dev["skeys"],
-                         dp_keys=dev["dp_keys"], weights=wts_dev)
+                         dp_keys=dev["dp_keys"], weights=wts_dev,
+                         eff_sizes=eff_dev)
 
     def fused_scbf_chunk(self, params, plan: FusedPlan, cfg: ScbfConfig,
-                         nmasks=None):
+                         nmasks=None, collect: bool = False):
         """Run one fused chunk: S rounds, zero host crossings inside.
 
         ``nmasks`` (mask-mode SCBFwP) is the chunk's neuron keep-mask
@@ -632,7 +737,10 @@ class BatchedEngine:
         are model-geometry state and follow the weights-never-shard
         contract).  Returns (new_params, masked_deltas, masks) — the
         stacked outputs stay on device until ``emit_fused_payloads``
-        pulls them for wire accounting at the chunk boundary.
+        pulls them for wire accounting at the chunk boundary — plus the
+        (S,)-stacked on-device ``MetricsCarry`` when ``collect`` (the
+        caller offloads it together with the payload transfer; nothing
+        extra crosses the host inside the chunk).
         """
         p = tuple(params)
         if self.mesh is not None:
@@ -645,15 +753,19 @@ class BatchedEngine:
                 p, self.cohort.x, self.cohort.y, self.cohort.w,
                 plan.part_idx, plan.valid, plan.lrs,
                 plan.ckeys, plan.skeys, plan.dp_keys, nmasks,
+                plan.eff_sizes,
                 batch_size=self.batch_size, epochs=self.epochs,
                 masked_loss=not self.cohort.uniform,
                 upload_rate=cfg.upload_rate, selection_mode=cfg.selection,
                 score_norm=cfg.score_norm,
                 dp_noise=cfg.dp_noise_multiplier,
-                dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis)
+                dp_clip=cfg.dp_clip_norm, spmd_axis=self.spmd_axis,
+                collect=collect)
 
-    def fused_fedavg_chunk(self, params, plan: FusedPlan):
-        """Run one fused FedAvg chunk; returns only the final params."""
+    def fused_fedavg_chunk(self, params, plan: FusedPlan,
+                           collect: bool = False):
+        """Run one fused FedAvg chunk; returns only the final params
+        (plus the (S,)-stacked ``FedAvgMetrics`` when ``collect``)."""
         if plan.weights is None:
             raise ValueError("fused fedavg needs the plan built with "
                              "per-slot example weights")
@@ -667,7 +779,7 @@ class BatchedEngine:
                 plan.part_idx, plan.weights, plan.lrs, plan.ckeys,
                 batch_size=self.batch_size, epochs=self.epochs,
                 masked_loss=not self.cohort.uniform,
-                spmd_axis=self.spmd_axis)
+                spmd_axis=self.spmd_axis, collect=collect)
 
     def emit_fused_payloads(self, masked_s, masks_s, plan: FusedPlan,
                             keep=None
@@ -684,18 +796,19 @@ class BatchedEngine:
         reconstructed payloads are byte-identical to what the per-round
         path emits because the masked deltas are.
         """
-        masked_host = jax.device_get(masked_s)
-        masks_host = jax.device_get(masks_s)
-        out = []
-        for r in range(plan.rounds):
-            payloads, stats = [], []
-            for i in range(int(plan.participants[r].size)):
-                payload, st = _encode_slot(masked_host, masks_host,
-                                           (r, i), keep)
-                payloads.append(payload)
-                stats.append(st)
-            out.append((payloads, stats))
-        return out
+        with obstrace.span("encode", rounds=plan.rounds):
+            masked_host = jax.device_get(masked_s)
+            masks_host = jax.device_get(masks_s)
+            out = []
+            for r in range(plan.rounds):
+                payloads, stats = [], []
+                for i in range(int(plan.participants[r].size)):
+                    payload, st = _encode_slot(masked_host, masks_host,
+                                               (r, i), keep)
+                    payloads.append(payload)
+                    stats.append(st)
+                out.append((payloads, stats))
+            return out
 
 
 class SequentialEngine:
@@ -726,15 +839,21 @@ class SequentialEngine:
         return len(self.clients)
 
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
-                   cfg: ScbfConfig, nmasks=None, keep=None):
+                   cfg: ScbfConfig, nmasks=None, keep=None,
+                   collect: bool = False):
         stacked = isinstance(params, list)
         payloads, stats = [], []
+        losses = []
         for i, k in enumerate(participants):
             p0 = tuple(params[i]) if stacked else tuple(params)
             xc, yc = self.clients[int(k)]
-            new_p = local_train(p0, xc, yc, lr, ckeys[i],
-                                batch_size=self.batch_size,
-                                epochs=self.epochs, neuron_masks=nmasks)
+            tr = local_train(p0, xc, yc, lr, ckeys[i],
+                             batch_size=self.batch_size,
+                             epochs=self.epochs, neuron_masks=nmasks,
+                             with_loss=collect)
+            new_p, loss = tr if collect else (tr, None)
+            if collect:
+                losses.append(loss)          # device scalar; fetched once below
             g = client_delta(p0, new_p)
             masked, masks, _ = sel.select_gradients(
                 g, cfg.upload_rate, cfg.selection, key=skeys[i],
@@ -749,16 +868,33 @@ class SequentialEngine:
                 masks = _compact_layers(masks, keep)
             payloads.append(wire.encode(masked))
             stats.append(sel.UploadStats.from_masks(masks))
+        if collect:
+            losses = [float(x) for x in jax.device_get(losses)]
+            return payloads, stats, _host_round_metrics(payloads, stats,
+                                                        losses)
         return payloads, stats
 
-    def fedavg_round(self, params, participants, lr, ckeys):
+    def fedavg_round(self, params, participants, lr, ckeys,
+                     collect: bool = False):
         outs = []
+        losses = []
         for i, k in enumerate(participants):
             xc, yc = self.clients[int(k)]
-            outs.append(local_train(tuple(params), xc, yc, lr, ckeys[i],
-                                    batch_size=self.batch_size,
-                                    epochs=self.epochs))
-        return outs, self.counts[np.asarray(participants)]
+            tr = local_train(tuple(params), xc, yc, lr, ckeys[i],
+                             batch_size=self.batch_size,
+                             epochs=self.epochs, with_loss=collect)
+            new_p, loss = tr if collect else (tr, None)
+            if collect:
+                losses.append(loss)          # device scalar; fetched once below
+            outs.append(new_p)
+        counts = self.counts[np.asarray(participants)]
+        if collect:
+            losses = [float(x) for x in jax.device_get(losses)]
+            dm = {"participants": len(outs),
+                  "train_loss": (sum(losses) / len(losses))
+                  if losses else 0.0}
+            return outs, counts, dm
+        return outs, counts
 
 
 ENGINES = {"batched": BatchedEngine, "sequential": SequentialEngine}

@@ -59,6 +59,20 @@ class RoundPlan:
     def num_participants(self) -> int:
         return int(self.participants.size)
 
+    def telemetry(self) -> dict:
+        """Scheduler fields of the flight recorder's ``round`` event
+        (repro.obs, docs/OBSERVABILITY.md): cohort composition plus the
+        FedBuff staleness profile (zeros under sync scheduling)."""
+        return {
+            "sampled": int(self.sampled.size),
+            "dropped": int(self.dropped.size),
+            "stragglers": int(self.stragglers.size),
+            "staleness_mean": float(np.mean(self.staleness))
+            if self.staleness.size else 0.0,
+            "staleness_max": int(np.max(self.staleness))
+            if self.staleness.size else 0,
+        }
+
 
 class SyncScheduler:
     """Per-round client sampling with dropout and deadline stragglers."""

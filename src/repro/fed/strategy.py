@@ -29,6 +29,7 @@ import numpy as np
 from repro.comm import wire
 from repro.config import FedConfig, ScbfConfig
 from repro.core import server
+from repro.obs import trace as obstrace
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +230,8 @@ class FedBuff:
                                   + step * b).astype(p.dtype),
                     params, buf)
                 version += 1
+                obstrace.event("fedbuff_flush", version=version,
+                               buffered=count)
                 buf, count = None, 0
         return dataclasses.replace(state, params=params, version=version,
                                    buffer_sum=buf, buffer_count=count)

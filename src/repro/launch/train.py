@@ -44,11 +44,15 @@ def _fed_lm_step(bundle, scbf, lr: float):
         lambda p, b: bundle.loss_fn(p, b), scbf, lr=lr))
 
 
+import contextlib
+
+
 def run_medical(args):
     import jax
     from repro.config import FedConfig, ScbfConfig, TrainConfig
     from repro.core.scbf import run_federated
     from repro.data.medical import generate_cohort
+    from repro.obs import recording
 
     cohort = generate_cohort(seed=args.seed)
     os.makedirs(args.out, exist_ok=True)
@@ -80,18 +84,26 @@ def run_medical(args):
                             dp_noise_multiplier=getattr(
                                 args, "dp_noise", 0.0)),
             fed=fed)
-        res = run_federated(cohort, cfg, method=base, verbose=True)
+        # --events: one flight-recorder JSONL per method, feed it to
+        # ``python -m repro.obs.report`` (docs/OBSERVABILITY.md)
+        rec_ctx = recording(os.path.join(args.out, f"{method}.events.jsonl")) \
+            if getattr(args, "events", False) else contextlib.nullcontext()
+        with rec_ctx:
+            res = run_federated(cohort, cfg, method=base, verbose=True)
         results[method] = res
         path = os.path.join(args.out, f"{res.method}.csv")
         with open(path, "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["loop", "auc_roc", "auc_pr", "upload_fraction",
                         "sparse_bytes", "dense_bytes", "wall_time",
+                        "wall_is_amortized", "train_loss",
                         "flops_proxy", "hidden_sizes", "participants",
                         "epsilon"])
             for r in res.records:
                 w.writerow([r.loop, r.auc_roc, r.auc_pr, r.upload_fraction,
                             r.sparse_bytes, r.dense_bytes, r.wall_time,
+                            int(r.wall_is_amortized),
+                            "" if r.train_loss is None else r.train_loss,
                             r.flops_proxy,
                             "x".join(map(str, r.hidden_sizes)),
                             r.num_participants,
@@ -164,6 +176,10 @@ def main():
     ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="DP noise multiplier on scbf uploads (0 = off)")
+    ap.add_argument("--events", action="store_true",
+                    help="write <out>/<method>.events.jsonl flight-recorder "
+                         "logs (repro.obs; view with python -m "
+                         "repro.obs.report)")
     # lm mode
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--steps", type=int, default=100)

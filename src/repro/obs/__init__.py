@@ -1,0 +1,18 @@
+"""Flight recorder for the federated engine (docs/OBSERVABILITY.md).
+
+Three layers:
+
+* ``repro.obs.trace``   — host spans + the JSONL run event log
+  (``with span("encode"): ...``, ``recording(path)``, Perfetto export);
+* ``repro.obs.metrics`` — ``MetricsCarry``, the on-device per-round
+  telemetry pytree threaded through the fused scan and offloaded only
+  at chunk boundaries;
+* ``repro.obs.report``  — ``python -m repro.obs.report events.jsonl``,
+  per-round tables and the machine-readable summary the benches and
+  the CI perf gate consume.
+"""
+from repro.obs.trace import (EMITTER, EVENT_SCHEMA, Recorder, count, event,
+                             get_recorder, recording, span, to_chrome_trace)
+
+__all__ = ["EMITTER", "EVENT_SCHEMA", "Recorder", "count", "event",
+           "get_recorder", "recording", "span", "to_chrome_trace"]

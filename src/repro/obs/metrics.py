@@ -1,0 +1,204 @@
+"""On-device telemetry for the federated engines — ``MetricsCarry``.
+
+The fused round loop (repro.fed.engine) runs whole chunks of rounds as
+one jitted ``lax.scan`` with zero host crossings inside; the price was
+that per-round observables (train loss, selected channels, upload
+bytes) were invisible without breaking fusion.  This module computes
+them **inside the trace**: each cohort slot contributes a small typed
+pytree, slots reduce to per-round sums, the scan stacks rounds along
+the leading axis, and ONE ``jax.device_get`` at the chunk boundary
+(``offload``) brings the whole chunk's telemetry to the host — the same
+transfer discipline as the payload emission, proven clean under
+``jax.transfer_guard`` in tests/test_obs.py.
+
+Byte accounting mirrors ``repro.comm.wire`` exactly: per leaf the three
+codec costs (coo / bitmap / dense, in ``wire.CODECS`` order) are
+evaluated on the nonzero count of the masked delta and the cheapest
+wins, with ``argmin``'s first-minimum tie-break matching ``min()`` over
+the same tuple order — so the device numbers equal the encoded payload
+bytes bit-for-bit (cross-checked against ``Payload.nbytes`` in tests).
+Mask-mode SCBFwP emission compacts payloads to the effective geometry;
+``effective_leaf_sizes`` reproduces those sizes host-side so the device
+math prices the compacted encoding (nonzero counts are unaffected:
+pruned coordinates are exactly zero by construction).
+
+Everything here is f32/i32 scalar work per leaf — a few hundred flops
+next to a round's training matmuls — which is what keeps the measured
+telemetry overhead on the fused path under the docs/OBSERVABILITY.md
+budget.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire
+from repro.obs import trace
+
+_ITEMSIZE = 4                      # masked deltas travel as f32
+
+
+class MetricsCarry(NamedTuple):
+    """Per-round SCBF telemetry, accumulated on device.
+
+    All fields are *sums over valid slots* (padding contributes exact
+    zeros), so an (S,)-stacked carry offloads as raw per-round totals
+    and the host derives means (``offload`` divides loss by
+    participants).  ``selected`` is ``(L,)`` — selected channels per
+    layer; ``codec_bytes`` is ``(3,)`` in ``wire.CODECS`` order.
+    """
+
+    loss_sum: jnp.ndarray          # f32 scalar — Σ valid-slot train loss
+    participants: jnp.ndarray      # i32 scalar — valid slots this round
+    selected: jnp.ndarray          # (L,) i32 — Σ selected channels/layer
+    sparse_bytes: jnp.ndarray      # i32 — Σ cheapest-codec wire bytes
+    codec_bytes: jnp.ndarray       # (3,) i32 — bytes by winning codec
+
+
+class FedAvgMetrics(NamedTuple):
+    """FedAvg's slimmer carry: dense uploads have no codec/selection."""
+
+    loss_sum: jnp.ndarray          # f32 scalar
+    participants: jnp.ndarray      # i32 scalar
+
+
+def leaf_codec_costs(nnz, sizes):
+    """(3, n_leaves) codec cost matrix, rows in ``wire.CODECS`` order.
+
+    The formulas are ``wire.coo_bytes`` / ``bitmap_bytes`` /
+    ``dense_bytes`` transcribed to i32 array math; any edit there must
+    land here too (pinned by the bytes cross-check in tests/test_obs).
+    """
+    coo = nnz * (wire.INDEX_BYTES + _ITEMSIZE)
+    bitmap = (sizes + 7) // 8 + nnz * _ITEMSIZE
+    dense = sizes * _ITEMSIZE
+    return jnp.stack([coo, bitmap, dense])
+
+
+def slot_metrics(loss, masked, masks, v, eff_sizes=None) -> MetricsCarry:
+    """One cohort slot's telemetry, traced inside the engine pass.
+
+    ``masked``/``masks`` arrive already validity-zeroed by the engine
+    (padding slots have all-zero deltas and all-false masks), so the
+    byte and channel counts need no extra gating — an invalid slot's
+    nnz is 0, coo wins at 0 bytes, and every sum field contributes
+    nothing.  Only ``loss`` (computed before the zeroing) is gated by
+    ``v`` here.  ``eff_sizes`` is the (n_leaves,) effective-geometry
+    size vector (mask-mode SCBFwP; ``None`` prices full leaf sizes,
+    folded in as trace-time constants).
+    """
+    leaves = jax.tree_util.tree_leaves(tuple(masked))
+    nnz = jnp.stack([jnp.count_nonzero(lf).astype(jnp.int32)
+                     for lf in leaves])
+    if eff_sizes is None:
+        sizes = jnp.asarray([int(np.prod(lf.shape)) for lf in leaves],
+                            jnp.int32)
+    else:
+        sizes = eff_sizes.astype(jnp.int32)
+    costs = leaf_codec_costs(nnz, sizes)
+    cheapest = jnp.min(costs, axis=0)
+    # first minimum == wire.cheapest_bytes' min() over CODECS order
+    winner = jnp.argmin(costs, axis=0)
+    per_codec = jnp.stack([
+        jnp.sum(jnp.where(winner == c, cheapest, 0))
+        for c in range(len(wire.CODECS))])
+    sel = []
+    for layer in masks:
+        b = layer.get("b")
+        if b is not None:
+            sel.append(jnp.sum(b).astype(jnp.int32))
+        else:
+            # bias-free layer: a channel is selected iff any of its
+            # edges is (the mask column is all-true or all-false only
+            # for the input layer, so reduce with any, not all)
+            sel.append(jnp.sum(jnp.any(layer["w"], axis=0))
+                       .astype(jnp.int32))
+    return MetricsCarry(
+        loss_sum=jnp.where(v, loss, 0.0).astype(jnp.float32),
+        participants=v.astype(jnp.int32),
+        selected=jnp.stack(sel),
+        sparse_bytes=jnp.sum(cheapest),
+        codec_bytes=per_codec)
+
+
+def reduce_slots(slot_stacked):
+    """Sum a (B,)-stacked slot carry down to one per-round carry."""
+    return jax.tree_util.tree_map(lambda a: jnp.sum(a, axis=0),
+                                  slot_stacked)
+
+
+def effective_leaf_sizes(params: Sequence[dict],
+                         keep: Optional[Sequence[np.ndarray]] = None
+                         ) -> np.ndarray:
+    """Host (n_leaves,) int32 — leaf sizes after emission compaction.
+
+    Mirrors ``fed.engine._compact_layers`` geometry: hidden layer l
+    keeps ``len(keep[l])`` neurons, so layer l's weight is
+    (kept_{l-1}, kept_l) and its bias (kept_l,), with the input and
+    output dimensions never compacted.  ``keep=None`` returns the full
+    sizes.  Leaf order is jax's dict flatten order (sorted keys: "b"
+    before "w" per layer), matching ``tree_leaves`` of the masked
+    delta; ``None`` entries (bias-free layers) produce no leaf.
+    """
+    last = len(params) - 1
+    sizes: List[int] = []
+    for l, layer in enumerate(params):
+        rows = int(np.shape(layer["w"])[0]) if l == 0 or keep is None \
+            else len(keep[l - 1])
+        cols = int(np.shape(layer["w"])[1]) if l == last or keep is None \
+            else len(keep[l])
+        for k in sorted(layer.keys()):
+            if layer[k] is None:
+                continue
+            if k == "w":
+                sizes.append(rows * cols)
+            elif k == "b":
+                sizes.append(cols)
+            else:
+                sizes.append(int(np.prod(np.shape(layer[k]))))
+    return np.asarray(sizes, np.int32)
+
+
+def offload(carry, rounds: Optional[int] = None
+            ) -> Union[Dict[str, Any], List[Dict[str, Any]]]:
+    """THE device→host transfer for a chunk's telemetry.
+
+    One ``jax.device_get`` of the whole stacked carry — called at chunk
+    boundaries only, never inside the fused scan (the transfer-guard
+    tests pin this).  ``rounds=None`` converts a single round's carry;
+    an integer trims an (S,)-stacked carry to its real (non-padding)
+    rounds.  Returns plain-python dicts ready for the event log:
+    ``train_loss`` is the per-participant mean, ``codec_bytes`` keys by
+    ``wire.CODECS`` name.
+    """
+    host = jax.device_get(carry)
+    trace.count("host_offloads")
+    fields = host._asdict() if hasattr(host, "_asdict") else dict(host)
+
+    def row(r: Optional[int]) -> Dict[str, Any]:
+        def pick(name):
+            a = np.asarray(fields[name])
+            return a if r is None else a[r]
+
+        p = int(pick("participants"))
+        out: Dict[str, Any] = {
+            "participants": p,
+            "train_loss": float(pick("loss_sum")) / max(p, 1),
+        }
+        if "selected" in fields:
+            out["selected"] = [int(s) for s in np.atleast_1d(
+                pick("selected"))]
+        if "sparse_bytes" in fields:
+            out["sparse_bytes"] = int(pick("sparse_bytes"))
+        if "codec_bytes" in fields:
+            out["codec_bytes"] = {
+                c: int(b) for c, b in zip(wire.CODECS,
+                                          np.atleast_1d(pick("codec_bytes")))}
+        return out
+
+    if rounds is None:
+        return row(None)
+    return [row(r) for r in range(rounds)]

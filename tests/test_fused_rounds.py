@@ -413,33 +413,54 @@ def test_bench_regression_checker_logic():
     rows are informational — only their presence is required)."""
     chk = _load_checker()
     baseline = {
+        "schema": 2,
         "k_scaling": [{"K": 5, "speedup": 8.0}, {"K": 500, "speedup": 10.0}],
         "compile_counts": {"pow2": {"compiles": 1},
                            "exact": {"compiles": 7}},
-        "fused": {"speedup": 4.0, "compile_trace": {"compiles": 1}},
+        "fused": {"speedup": 4.0, "compile_trace": {"compiles": 1},
+                  "telemetry": {"overhead": 0.03}},
         "prune": {"speedup": 2.0, "compiles": 2,
                   "steady": {"time_saving": 0.4}},
     }
     same = {
+        "schema": 2,
         "k_scaling": [{"K": 5, "speedup": 2.0},    # jitter: not gated
                       {"K": 500, "speedup": 5.0}],  # jitter: not gated
         "compile_counts": {"pow2": {"compiles": 1},
                            "exact": {"compiles": 7}},
-        "fused": {"speedup": 3.5, "compile_trace": {"compiles": 1}},
+        "fused": {"speedup": 3.5, "compile_trace": {"compiles": 1},
+                  "telemetry": {"overhead": 0.10}},  # jitter: <= 25% passes
         "prune": {"speedup": 1.8, "compiles": 2,
                   "steady": {"time_saving": 0.1}},   # jitter: sign-gated
     }
     assert chk.compare(same, baseline) == []
+    # schema handshake: a mismatched blob on EITHER side is refused
+    # outright with a regenerate instruction, never field-compared
+    old_fresh = {k: v for k, v in same.items() if k != "schema"}
+    msgs = chk.compare(old_fresh, baseline)
+    assert len(msgs) == 1 and "schema" in msgs[0] and "fresh" in msgs[0]
+    old_base = {**baseline, "schema": 1}
+    msgs = chk.compare(same, old_base)
+    assert len(msgs) == 1 and "schema" in msgs[0] and "baseline" in msgs[0]
     retrace = {**same, "compile_counts": {"pow2": {"compiles": 3},
                                           "exact": {"compiles": 7}}}
     assert any("compile_counts" in m for m in chk.compare(retrace, baseline))
-    fused_slow = {**same, "fused": {"speedup": 2.0,
-                                    "compile_trace": {"compiles": 1}}}
+    fused_slow = {**same, "fused": {**same["fused"], "speedup": 2.0}}
     assert any("fused" in m for m in chk.compare(fused_slow, baseline))
-    fused_retrace = {**same, "fused": {"speedup": 4.0,
+    fused_retrace = {**same, "fused": {**same["fused"], "speedup": 4.0,
                                        "compile_trace": {"compiles": 2}}}
     assert any("compile trace" in m
                for m in chk.compare(fused_retrace, baseline))
+    # flight-recorder cost: > 25% overhead fails, a dropped telemetry
+    # section fails (schema 2 always records one)
+    slow_telem = {**same, "fused": {**same["fused"],
+                                    "telemetry": {"overhead": 0.40}}}
+    assert any("telemetry overhead" in m
+               for m in chk.compare(slow_telem, baseline))
+    no_telem = {**same, "fused": {k: v for k, v in same["fused"].items()
+                                  if k != "telemetry"}}
+    assert any("telemetry" in m and "missing" in m
+               for m in chk.compare(no_telem, baseline))
     missing = {k: v for k, v in same.items() if k != "fused"}
     assert any("missing" in m for m in chk.compare(missing, baseline))
     # the fused-SCBFwP section: ratio drop, compile growth, a negative
@@ -474,7 +495,11 @@ def test_bench_regression_checker_logic():
                / "baselines" / "fed_engine.json")
     committed = json.loads(bl_path.read_text())
     assert chk.compare(committed, committed) == []
+    assert committed["schema"] == 2
     assert committed["fused"]["speedup"] >= 2.0   # the acceptance bar
     assert committed["fused"]["compile_trace"]["compiles"] <= 2
+    # the flight recorder stays cheap (the <5% target lives in
+    # docs/OBSERVABILITY.md; the committed number must meet the CI bound)
+    assert committed["fused"]["telemetry"]["overhead"] <= 0.25
     assert committed["prune"]["compiles"] <= 2    # the PR 5 bar
     assert committed["prune"]["steady"]["time_saving"] > 0
