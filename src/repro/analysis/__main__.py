@@ -1,6 +1,10 @@
-"""``python -m repro.analysis`` — shorthand for the tracelint CLI."""
+"""``python -m repro.analysis`` — merged tracelint + privlint runner.
+
+Use ``python -m repro.analysis.tracelint`` / ``.privlint`` for a single
+tool with its full CLI (baseline writing, rule subsets, …).
+"""
 import sys
 
-from repro.analysis.tracelint import main
+from repro.analysis.runner import main
 
 sys.exit(main())

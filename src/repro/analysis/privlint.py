@@ -1,19 +1,21 @@
-"""tracelint CLI — the retrace/host-sync/recompile lint gate.
+"""privlint CLI — the client→server privacy-boundary lint gate.
 
-    PYTHONPATH=src python -m repro.analysis.tracelint \
-        src benchmarks examples --baseline analysis/baseline.json
+    PYTHONPATH=src python -m repro.analysis.privlint \
+        src benchmarks examples --baseline analysis/privacy_baseline.json
 
-Exit status 0 when every finding is either suppressed in source
-(``# tracelint: disable=TLxxx``) or recorded in the committed baseline;
-1 when new findings exist (the CI gate); 2 on usage errors.  The
-analysis is pure ``ast`` — nothing under the scanned paths is imported
-or executed, so the lint job needs no JAX backend and runs in seconds.
+Runs the interprocedural taint-flow analysis (``repro.analysis.taint``
+with the policy in ``repro.analysis.privrules``) over the call graph
+and reports PL001–PL006 findings.  Exit status 0 when every finding is
+suppressed in source (``# privlint: disable=PLxxx``) or recorded in the
+committed baseline with a justification; 1 when new findings exist (the
+CI gate); 2 on usage errors.  Pure ``ast`` — nothing under the scanned
+paths is imported or executed, so the gate needs no JAX backend.
 
     --json-out FILE      machine-readable findings (new + baselined)
     --write-baseline     accept the current findings as the baseline
                          (existing justifications are preserved)
     --list-baseline      print the accepted findings and exit
-    --rules TL001,TL004  run a subset of rules
+    --rules PL001,PL004  run a subset of rules
 """
 from __future__ import annotations
 
@@ -22,9 +24,9 @@ import json
 import sys
 from typing import List, Optional, Sequence, Tuple
 
-from repro.analysis import astgraph
-from repro.analysis.config import (DEFAULT_BASELINE, DEFAULT_PATHS,
-                                   LintConfig, SOURCE_ROOTS)
+from repro.analysis import astgraph, privrules
+from repro.analysis.config import (DEFAULT_PATHS,
+                                   DEFAULT_PRIVACY_BASELINE, SOURCE_ROOTS)
 from repro.analysis.report import (Baseline, Finding, assign_ordinals,
                                    decorator_regions, json_report,
                                    render_report, suppressed)
@@ -35,31 +37,31 @@ def run_paths(paths: Sequence[str],
               source_roots: Sequence[str] = SOURCE_ROOTS,
               ) -> Tuple[List[Finding], int]:
     """Lint ``paths``; returns (unsuppressed findings, files scanned)."""
-    cfg = LintConfig(paths=tuple(paths),
-                     rules=set(rules) if rules else set(
-                         LintConfig().rules))
-    graph = astgraph.build_graph(cfg.paths, roots=source_roots)
+    graph = astgraph.build_graph(tuple(paths), roots=source_roots)
+    raw = privrules.run_privacy_rules(graph, rules=rules)
     findings: List[Finding] = []
-    for mod in graph.modules.values():
-        regions = decorator_regions(mod.tree)
-        for code, rule in cfg.selected_rules().items():
-            for f in rule(mod, graph):
-                if not suppressed(f, mod.source_lines, regions):
-                    findings.append(f)
+    regions_by_path = {
+        mod.path: (decorator_regions(mod.tree), mod.source_lines)
+        for mod in graph.modules.values()}
+    for f in raw:
+        regions, source_lines = regions_by_path.get(f.path, (None, ()))
+        if not suppressed(f, source_lines, regions):
+            findings.append(f)
     return assign_ordinals(findings), len(graph.modules)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="tracelint",
-        description="JAX-aware static analysis for the "
-                    "retrace/host-sync/recompile bug class")
+        prog="privlint",
+        description="interprocedural taint-flow analysis for the "
+                    "client→server privacy boundary")
     ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
                     help=f"files/directories to lint "
                          f"(default: {' '.join(DEFAULT_PATHS)})")
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+    ap.add_argument("--baseline", default=DEFAULT_PRIVACY_BASELINE,
                     help="committed accepted-findings file "
-                         f"(default: {DEFAULT_BASELINE}; pass '' for none)")
+                         f"(default: {DEFAULT_PRIVACY_BASELINE}; "
+                         f"pass '' for none)")
     ap.add_argument("--json-out", default=None,
                     help="write a machine-readable report to this file")
     ap.add_argument("--write-baseline", action="store_true",
@@ -67,14 +69,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--list-baseline", action="store_true",
                     help="print the baseline entries and exit")
     ap.add_argument("--rules", default=None,
-                    help="comma-separated subset (e.g. TL001,TL004)")
+                    help="comma-separated subset (e.g. PL001,PL004)")
     args = ap.parse_args(argv)
 
     baseline_path = args.baseline or None
     try:
         baseline = Baseline.load(baseline_path)
     except (ValueError, json.JSONDecodeError) as e:
-        print(f"tracelint: bad baseline: {e}", file=sys.stderr)
+        print(f"privlint: bad baseline: {e}", file=sys.stderr)
         return 2
 
     if args.list_baseline:
@@ -90,18 +92,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     try:
         findings, files_scanned = run_paths(args.paths, rules=rules)
     except ValueError as e:
-        print(f"tracelint: {e}", file=sys.stderr)
+        print(f"privlint: {e}", file=sys.stderr)
         return 2
 
     new, accepted, stale = baseline.split(findings)
 
     if args.write_baseline:
         if baseline_path is None:
-            print("tracelint: --write-baseline needs --baseline",
+            print("privlint: --write-baseline needs --baseline",
                   file=sys.stderr)
             return 2
         baseline.write(baseline_path, findings)
-        print(f"tracelint: wrote {len(findings)} finding(s) to "
+        print(f"privlint: wrote {len(findings)} finding(s) to "
               f"{baseline_path} — fill in any TODO justifications")
         return 0
 
@@ -112,7 +114,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             f.write("\n")
 
     print(render_report(new, accepted, stale, baseline_path,
-                        files_scanned))
+                        files_scanned, tool="privlint"))
     return 1 if new else 0
 
 

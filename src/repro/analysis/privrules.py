@@ -1,0 +1,112 @@
+"""privlint policy + rule catalogue (PL001–PL006).
+
+The taint engine (``repro.analysis.taint``) is generic; this module
+pins it to *this* repo's privacy architecture: which functions mint
+sensitive values, which calls are the sanctioned sanitizer chain
+
+    channels/selection (→ SELECTED)
+      → privacy.gaussian_mechanism + RDP accounting (→ DP-NOISED)
+      → comm.wire.encode (→ WIRE)
+      → strategy.*_step (server),
+
+and which calls are sinks past the privacy boundary.  Patterns are
+dotted-name *suffixes* matched on whole components, so
+``"wire.encode"`` matches ``repro.comm.wire.encode`` from any import
+alias but never ``Transformer.encode``.
+
+Rule catalogue
+--------------
+PL001  un-sanitized value reaches ``wire.encode`` — a LOCAL/RAW value
+       (dense delta, raw batch) would ship to the server un-noised.
+PL002  noise ordering violation — ``gaussian_mechanism`` applied to an
+       already-encoded or already-revealed value; the un-noised
+       coordinates have left the boundary, noising after the fact is
+       theatre.
+PL003  PRNG key hygiene on the noise path — a loop-invariant key, a
+       key consumed twice without a re-split, or one key element
+       replicated across slots.  Correlated noise across clients or
+       rounds voids the accountant's independence assumption.
+PL004  accounting skew — a DP-noised payload is emitted with no
+       accountant update anywhere on its caller chain (ε/δ spend
+       untracked), or one function updates the release ledger twice
+       for one emission (budget double-counted).
+PL005  reveal/keep mask widened after noising — the Gaussian noise was
+       calibrated to the pre-widening reveal set, so the extra
+       coordinates ship with zero noise budget (includes the
+       mask-mode compacted-geometry path).
+PL006  telemetry/checkpoint sink (``obs.trace.event``, device metrics
+       collection, ``LoopRecord``, ``ckpt.save_checkpoint``) receives
+       a pre-DP per-client value — events.jsonl and checkpoints are
+       outside the privacy boundary.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import astgraph, taint
+from repro.analysis.report import Finding
+
+PRIV_RULES = {
+    "PL001": "tainted value reaches the wire without the sanitizer chain",
+    "PL002": "DP noise applied after encoding / to revealed coordinates",
+    "PL003": "PRNG key reused across clients/rounds on the noise path",
+    "PL004": "ε/δ accounting skipped or double-counted for a payload",
+    "PL005": "reveal/keep mask widened after noising",
+    "PL006": "telemetry/checkpoint sink receives pre-DP per-client values",
+}
+
+POLICY = taint.Policy(
+    # -- sources -------------------------------------------------------
+    # raw client examples/labels: the federated splitters and the
+    # cohort attribute names they populate
+    raw_sources=("dirichlet_split", "federated_split"),
+    raw_attrs=("x_train", "y_train", "x_val", "y_val",
+               "x_test", "y_test"),
+    # per-client training artefacts: params, losses, dense deltas
+    local_sources=("local_train", "local_train_impl",
+                   "masked_local_train_impl", "client_delta"),
+    # -- the sanctioned sanitizer chain --------------------------------
+    selectors=("select_gradients", "apply_channel_mask"),
+    noisers=("gaussian_mechanism",),
+    encoders=("wire.encode", "wire.encode_leaf"),
+    decoders=("wire.decode",),
+    # cohort-level reductions: only aggregates cross to host telemetry
+    aggregators=("metrics.offload", "metrics.reduce_slots",
+                 "_host_round_metrics", "_host_fedavg_metrics",
+                 "pruner.step", "pruner.compact"),
+    # scalar eval metrics computed on the server's own eval pass
+    metric_fns=("auc_roc", "auc_pr"),
+    # -- accounting (PL004) --------------------------------------------
+    accountant_calls=("epsilon_for", "amplified_epsilon_for",
+                      "rdp_to_dp"),
+    ledger_name_fragment="releases",
+    # -- sinks past the privacy boundary (PL006) -----------------------
+    telemetry_sinks=("trace.event", "trace.count", "slot_metrics",
+                     "FedAvgMetrics", "LoopRecord", "save_checkpoint"),
+    # -- key hygiene (PL003) -------------------------------------------
+    key_makers=("PRNGKey", "random.split", "random.fold_in",
+                "random.key"),
+    key_replicators=("broadcast_to", "tile", "repeat"),
+    # -- post-noise mask widening (PL005) ------------------------------
+    wideners=("logical_or", "maximum", "bitwise_or", "concatenate",
+              "append"),
+    # shape-only constructors never carry data
+    clean_calls=("zeros", "ones", "zeros_like", "ones_like", "arange",
+                 "eye", "full", "full_like", "empty", "linspace"),
+)
+
+
+def run_privacy_rules(graph: astgraph.CallGraph,
+                      rules: Optional[Sequence[str]] = None,
+                      ) -> List[Finding]:
+    """Run the taint fixpoint + PL rule checks over ``graph``."""
+    selected: Optional[Set[str]] = None
+    if rules is not None:
+        selected = set(rules)
+        unknown = selected - set(PRIV_RULES)
+        if unknown:
+            raise ValueError(
+                f"unknown privacy rule(s): {', '.join(sorted(unknown))} "
+                f"(known: {', '.join(sorted(PRIV_RULES))})")
+    analysis = taint.TaintAnalysis(graph, POLICY, rules=selected)
+    return analysis.run()

@@ -7,13 +7,19 @@ A finding's **key** is line-number-free on purpose:
 (ordinal = n-th finding of that rule inside that symbol), so the
 committed baseline survives unrelated edits that shift line numbers.
 Suppression is per line: a ``# tracelint: disable=TL001`` (or
-``disable=TL001,TL002``, or a bare ``disable`` for all rules) comment on
-the flagged line or the line directly above silences the finding at the
-source; the baseline instead *records* a finding that stays visible in
-``--list-baseline`` with a justification.
+``# privlint: disable=PL001``, ``disable=TL001,TL002``, or a bare
+``disable`` for all rules) comment on the flagged line or the line
+directly above silences the finding at the source; for a finding inside
+a decorated ``def``'s header (any decorator line through the ``def``
+line) the comment may sit anywhere in that header or on the line above
+it.  The baseline instead *records* a finding that stays visible in
+``--list-baseline`` with a justification.  Both linters (tracelint and
+privlint) share these semantics — the rule-code filter is what scopes a
+comment to one tool.
 """
 from __future__ import annotations
 
+import ast
 import json
 import os
 import re
@@ -22,7 +28,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 _SUPPRESS_RE = re.compile(
-    r"#\s*tracelint:\s*disable(?:=(?P<codes>[A-Z0-9,\s]+))?")
+    r"#\s*(?:tracelint|privlint):\s*disable(?:=(?P<codes>[A-Z0-9,\s]+))?")
 
 BASELINE_VERSION = 1
 
@@ -61,9 +67,33 @@ def assign_ordinals(findings: List[Finding]) -> List[Finding]:
     return findings
 
 
-def suppressed(finding: Finding, source_lines: Sequence[str]) -> bool:
+def decorator_regions(tree: ast.AST) -> Dict[int, range]:
+    """Lines inside a decorated def/class header → the whole header.
+
+    A finding anchored to a decorator line (``@partial(jax.jit, ...)``)
+    used to require the disable comment on that exact line; mapping every
+    header line (first decorator .. the ``def``/``class`` line) to the
+    full header lets the comment sit anywhere in it, or on the line
+    directly above the first decorator.
+    """
+    regions: Dict[int, range] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node.decorator_list:
+            start = min(d.lineno for d in node.decorator_list)
+            region = range(start - 1, node.lineno + 1)
+            for ln in range(start, node.lineno + 1):
+                regions[ln] = region
+    return regions
+
+
+def suppressed(finding: Finding, source_lines: Sequence[str],
+               regions: Optional[Dict[int, range]] = None) -> bool:
     """True when a disable comment covers the finding's line."""
-    for lineno in (finding.line, finding.line - 1):
+    lines = {finding.line, finding.line - 1}
+    if regions and finding.line in regions:
+        lines.update(regions[finding.line])
+    for lineno in lines:
         if 1 <= lineno <= len(source_lines):
             m = _SUPPRESS_RE.search(source_lines[lineno - 1])
             if m:
@@ -130,20 +160,20 @@ class Baseline:
 
 def render_report(new: Sequence[Finding], accepted: Sequence[Finding],
                   stale: Sequence[str], baseline_path: Optional[str],
-                  files_scanned: int) -> str:
+                  files_scanned: int, tool: str = "tracelint") -> str:
     lines: List[str] = []
     for f in sorted(new, key=lambda f: (f.path, f.line, f.col)):
         lines.append(f.render())
     if new:
         lines.append("")
-    lines.append(f"tracelint: {files_scanned} files, "
+    lines.append(f"{tool}: {files_scanned} files, "
                  f"{len(new)} new finding(s), "
                  f"{len(accepted)} baselined, {len(stale)} stale "
                  f"baseline entr{'y' if len(stale) == 1 else 'ies'}")
     if new:
         lines.append(
             "  new findings fail the lint: fix them, suppress with "
-            "'# tracelint: disable=<rule>' where intended, or accept "
+            f"'# {tool}: disable=<rule>' where intended, or accept "
             "into the baseline with --write-baseline"
             + (f" ({baseline_path})" if baseline_path else ""))
     if stale:

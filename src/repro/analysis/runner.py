@@ -1,0 +1,103 @@
+"""Merged analysis runner — both linters, one report, one exit code.
+
+    PYTHONPATH=src python -m repro.analysis                # both linters
+    PYTHONPATH=src python -m repro.analysis --trace        # tracelint only
+    PYTHONPATH=src python -m repro.analysis --privacy      # privlint only
+    PYTHONPATH=src python -m repro.analysis --privacy --json-out  # stdout
+    PYTHONPATH=src python -m repro.analysis --json-out report.json
+
+Each tool keeps its own committed baseline (tracelint →
+``analysis/baseline.json``, privlint →
+``analysis/privacy_baseline.json``) and its own suppression comment
+prefix; the runner merges their reports and exits 1 when EITHER tool
+has new findings — this is the single entry point the CI lint job
+calls.  Pure ``ast`` end to end: no JAX, no imports of scanned code.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import privlint, tracelint
+from repro.analysis.config import (DEFAULT_BASELINE, DEFAULT_PATHS,
+                                   DEFAULT_PRIVACY_BASELINE)
+from repro.analysis.report import (Baseline, json_report, render_report)
+
+_TOOLS = {
+    "tracelint": (tracelint.run_paths, DEFAULT_BASELINE),
+    "privlint": (privlint.run_paths, DEFAULT_PRIVACY_BASELINE),
+}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="run the repo's static analyses (tracelint + "
+                    "privlint) with one merged report")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help=f"files/directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--trace", action="store_true",
+                    help="run tracelint (TL rules) only")
+    ap.add_argument("--privacy", action="store_true",
+                    help="run privlint (PL rules) only")
+    ap.add_argument("--trace-baseline", default=DEFAULT_BASELINE,
+                    help=f"tracelint baseline "
+                         f"(default: {DEFAULT_BASELINE}; '' for none)")
+    ap.add_argument("--privacy-baseline",
+                    default=DEFAULT_PRIVACY_BASELINE,
+                    help=f"privlint baseline (default: "
+                         f"{DEFAULT_PRIVACY_BASELINE}; '' for none)")
+    ap.add_argument("--json-out", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="write the merged machine-readable report to "
+                         "FILE ('-' or no value: stdout)")
+    args = ap.parse_args(argv)
+
+    selected = [name for name, flag in
+                (("tracelint", args.trace), ("privlint", args.privacy))
+                if flag] or list(_TOOLS)
+    baselines = {"tracelint": args.trace_baseline or None,
+                 "privlint": args.privacy_baseline or None}
+
+    merged = {"version": 1, "tools": {}}
+    reports: List[str] = []
+    exit_code = 0
+    for name in selected:
+        run, _default = _TOOLS[name]
+        try:
+            baseline = Baseline.load(baselines[name])
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"{name}: bad baseline: {e}", file=sys.stderr)
+            return 2
+        try:
+            findings, files_scanned = run(args.paths)
+        except ValueError as e:
+            print(f"{name}: {e}", file=sys.stderr)
+            return 2
+        new, accepted, stale = baseline.split(findings)
+        merged["tools"][name] = json_report(new, accepted, stale,
+                                            files_scanned)
+        reports.append(render_report(new, accepted, stale,
+                                     baselines[name], files_scanned,
+                                     tool=name))
+        if new:
+            exit_code = 1
+
+    if args.json_out is not None:
+        if args.json_out == "-":
+            json.dump(merged, sys.stdout, indent=1)
+            sys.stdout.write("\n")
+        else:
+            with open(args.json_out, "w", encoding="utf-8") as f:
+                json.dump(merged, f, indent=1)
+                f.write("\n")
+
+    print("\n".join(reports))
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

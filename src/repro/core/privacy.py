@@ -41,6 +41,17 @@ def clip_tree(tree, max_norm: float):
         lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
 
 
+def _check_delta(delta: float) -> None:
+    """(ε, δ)-DP is vacuous outside δ ∈ (0, 1) — δ ≥ 1 is satisfied by
+    releasing the data in the clear, and the RDP→DP conversion would
+    happily report a small *finite* ε for it.  Refuse loudly."""
+    if not 0.0 < delta < 1.0:
+        raise ValueError(
+            f"delta must be in (0, 1) for a meaningful DP guarantee, "
+            f"got {delta} (delta >= 1 is satisfied by publishing the "
+            f"raw data; delta <= 0 is unsatisfiable)")
+
+
 def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float,
                        masks=None):
     """Clip to max_norm and add N(0, (noise_multiplier*max_norm)^2) to the
@@ -54,7 +65,24 @@ def gaussian_mechanism(tree, key, noise_multiplier: float, max_norm: float,
     noiselessly and leak its exact value.  Without ``masks`` the reveal
     set falls back to ``leaf != 0``, which is only sound when zeros are
     never released (dense uploads).
+
+    ``noise_multiplier`` must be strictly positive: σ = 0 would release
+    the clipped values in the clear while the caller *believes* DP is
+    on.  Callers that want DP off must not call the mechanism at all
+    (gate on ``dp_noise_multiplier > 0`` like the engines do).
     """
+    if noise_multiplier <= 0.0:
+        raise ValueError(
+            f"gaussian_mechanism called with noise_multiplier="
+            f"{noise_multiplier}: zero/negative noise would release the "
+            f"clipped update in the clear under a DP-looking code path. "
+            f"Gate the call on dp_noise_multiplier > 0 to run without "
+            f"DP, and report epsilon=inf for such runs.")
+    if max_norm <= 0.0:
+        raise ValueError(
+            f"clip bound max_norm must be > 0, got {max_norm} — a "
+            f"non-positive bound zeroes the upload or voids the "
+            f"sensitivity analysis the (ε, δ) guarantee rests on")
     clipped, _ = clip_tree(tree, max_norm)
     leaves, treedef = jax.tree_util.tree_flatten(clipped)
     mask_leaves = jax.tree_util.tree_leaves(masks) if masks is not None \
@@ -97,6 +125,7 @@ def rdp_to_dp(rdp_curve, orders, delta: float) -> float:
     Canonne-Kamath-Steinke):
         ε = ε_RDP(α) + log((α−1)/α) − (log δ + log α)/(α − 1).
     """
+    _check_delta(delta)
     best = math.inf
     for eps_a, a in zip(rdp_curve, orders):
         if a <= 1.0:
@@ -168,6 +197,7 @@ def amplified_epsilon_for(noise_multiplier: float, q: float,
     fedbuff participation (not an i.i.d. per-round sample); the driver
     refuses that combination rather than reporting a wrong ε.
     """
+    _check_delta(delta)
     if noise_multiplier <= 0:
         return math.inf
     if rounds <= 0:
@@ -187,8 +217,10 @@ def epsilon_for(noise_multiplier: float, delta: float = 1e-5,
     ``classic``: σ = sqrt(2 ln(1.25/δ))/ε per release, composed
     linearly — valid only while the per-release ε ≤ 1, and refused
     (ValueError) outside that domain rather than reporting a number the
-    theorem does not back.
+    theorem does not back.  σ ≤ 0 reports ε = ∞ honestly (no noise, no
+    guarantee); δ outside (0, 1) is refused (``_check_delta``).
     """
+    _check_delta(delta)
     if noise_multiplier <= 0:
         return math.inf
     if loops <= 0:
@@ -216,6 +248,7 @@ def sigma_for(epsilon: float, delta: float = 1e-5, loops: int = 1,
     decreasing in σ); ``classic`` uses the closed form, within its
     ε ≤ 1 validity domain only.
     """
+    _check_delta(delta)
     if epsilon <= 0:
         raise ValueError(f"epsilon must be > 0, got {epsilon}")
     if accountant == "classic":

@@ -304,6 +304,12 @@ def run_federated(cohort: MedicalCohort,
     # of a float() sync per loop, and the fused path's (S,) lr array
     lrs = _lr_table(train_cfg)
 
+    if cfg.dp_noise_multiplier < 0:
+        raise ValueError(
+            f"dp_noise_multiplier must be >= 0, got "
+            f"{cfg.dp_noise_multiplier}: the DP gate is "
+            f"'dp_noise_multiplier > 0', so a negative value would "
+            f"silently run without DP while looking configured")
     dp_on = method == "scbf" and cfg.dp_noise_multiplier > 0
     if dp_on:
         # fail fast on an unknown accountant or a classic-bound run

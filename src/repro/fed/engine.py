@@ -435,6 +435,21 @@ def _host_round_metrics(payloads, stats, losses):
     }
 
 
+def _host_fedavg_metrics(losses, num: int):
+    """Sequential fedavg round telemetry: cohort-level aggregates only.
+
+    The per-client loss list is reduced to its cohort mean HERE, before
+    the dict crosses into ``LoopRecord``/events.jsonl — this function is
+    a declared aggregation point in the privlint policy
+    (repro.analysis.privrules), so per-client scalars must not be added
+    to the dict.
+    """
+    return {
+        "participants": num,
+        "train_loss": (sum(losses) / len(losses)) if losses else 0.0,
+    }
+
+
 @dataclass
 class FusedPlan:
     """Device-resident plan for one fused chunk of rounds.
@@ -472,6 +487,26 @@ def _pad_slots(arr, num_slots: int):
         return arr
     reps = jnp.broadcast_to(arr[:1], (num_slots - p,) + arr.shape[1:])
     return jnp.concatenate([jnp.asarray(arr), reps], axis=0)
+
+
+def _pad_key_slots(keys, num_slots: int):
+    """Pad a (P, 2) PRNG key row up to ``num_slots`` with *distinct*
+    filler keys.
+
+    Padded slots are validity-masked — nothing they produce survives —
+    but repeating slot 0's key verbatim would make every padded slot
+    draw slot 0's noise stream (privlint PL003); offsetting the second
+    key word keeps each slot's stream distinct at zero cost, and the
+    validity mask still guarantees bit-identical round outputs.
+    """
+    keys = jnp.asarray(keys)
+    p = keys.shape[0]
+    if num_slots == p:
+        return keys
+    pad = num_slots - p
+    offs = jnp.stack([jnp.zeros(pad, jnp.uint32),
+                      jnp.arange(1, pad + 1, dtype=jnp.uint32)], axis=1)
+    return jnp.concatenate([keys, keys[:1] + offs], axis=0)
 
 
 class BatchedEngine:
@@ -529,24 +564,30 @@ class BatchedEngine:
             return self.cohort.x, self.cohort.y, self.cohort.w
         return self.cohort.x[part], self.cohort.y[part], self.cohort.w[part]
 
-    def _bucketed_inputs(self, participants, slot_arrays, params=None):
+    def _bucketed_inputs(self, participants, slot_arrays, key_arrays=(),
+                         params=None):
         """Pad per-slot arrays up to the bucket; returns (B, arrays,
-        params, valid).  With a pod mesh, per-slot arrays are placed
-        with the slot axis sharded over ``pod`` and params replicated.
+        keys, params, valid).  Data arrays pad by repeating slot 0
+        (``_pad_slots``); PRNG key rows pad with distinct derived keys
+        (``_pad_key_slots``) so padded slots never share a noise stream.
+        With a pod mesh, per-slot arrays are placed with the slot axis
+        sharded over ``pod`` and params replicated.
         """
         p_count = len(participants)
         b = bucket_size(p_count, self.num_clients, self.bucket, self.pods)
         valid = jnp.arange(b) < p_count
         out = [_pad_slots(jnp.asarray(a), b) for a in slot_arrays]
+        keys = [_pad_key_slots(k, b) for k in key_arrays]
         if params is not None:
             params = jax.tree_util.tree_map(lambda l: _pad_slots(l, b),
                                             params)
         if self.mesh is not None:
             out = [jax.device_put(a, self._slot_sharding) for a in out]
+            keys = [jax.device_put(k, self._slot_sharding) for k in keys]
             valid = jax.device_put(valid, self._slot_sharding)
             if params is not None:
                 params = jax.device_put(params, self._slot_sharding)
-        return b, out, params, valid
+        return b, out, keys, params, valid
 
     def scbf_round(self, params, participants, lr, ckeys, skeys, dp_keys,
                    cfg: ScbfConfig, nmasks=None, keep=None,
@@ -567,11 +608,13 @@ class BatchedEngine:
         xs, ys, ws = self._gather(participants)
         stacked = isinstance(params, list)
         p = stack_pytrees(params) if stacked else tuple(params)
-        _, (xs, ys, ws, ck, sk, dk), p_stk, valid = self._bucketed_inputs(
-            participants,
-            (xs, ys, ws, jnp.stack(list(ckeys)), jnp.stack(list(skeys)),
-             jnp.stack(list(dp_keys))),
-            params=p if stacked else None)
+        _, (xs, ys, ws), (ck, sk, dk), p_stk, valid = \
+            self._bucketed_inputs(
+                participants, (xs, ys, ws),
+                key_arrays=(jnp.stack(list(ckeys)),
+                            jnp.stack(list(skeys)),
+                            jnp.stack(list(dp_keys))),
+                params=p if stacked else None)
         if stacked:
             p = p_stk
         elif self.mesh is not None:
@@ -614,8 +657,9 @@ class BatchedEngine:
                 else ([], self.counts[:0])
         xs, ys, ws = self._gather(participants)
         p = tuple(params)
-        _, (xs, ys, ws, ck), _, _ = self._bucketed_inputs(
-            participants, (xs, ys, ws, jnp.stack(list(ckeys))))
+        _, (xs, ys, ws), (ck,), _, _ = self._bucketed_inputs(
+            participants, (xs, ys, ws),
+            key_arrays=(jnp.stack(list(ckeys)),))
         if self.mesh is not None:
             p = jax.device_put(p, self._repl_sharding)
         with self._mesh_ctx():
@@ -660,10 +704,10 @@ class BatchedEngine:
                            eff_sizes=None) -> FusedPlan:
         """Assemble + device-place one chunk's static (S, B) plan.
 
-        Per-round key rows pad by repeating slot 0 and a short tail
-        chunk pads with all-invalid rounds, exactly mirroring the
-        per-round path's ``_pad_slots`` semantics — this is where every
-        host→device transfer for the chunk happens.
+        Per-round key rows pad with distinct derived keys and a short
+        tail chunk pads with all-invalid rounds, exactly mirroring the
+        per-round path's ``_pad_slots``/``_pad_key_slots`` semantics —
+        this is where every host→device transfer for the chunk happens.
         """
         if self.mesh is not None and not self._cohort_replicated:
             # fused chunks gather cohorts on device, so the shards must
@@ -686,7 +730,15 @@ class BatchedEngine:
                 k = np.asarray(k)
                 if k.shape[0]:
                     out[r, :k.shape[0]] = k
-                    out[r, k.shape[0]:] = k[0]
+                    pad = num_slots - k.shape[0]
+                    if pad:
+                        # distinct filler keys, mirroring _pad_key_slots:
+                        # padded slots are validity-masked but must not
+                        # share slot 0's noise stream (privlint PL003)
+                        offs = np.zeros((pad,) + trailing, np.uint32)
+                        offs[..., -1] = np.arange(1, pad + 1,
+                                                  dtype=np.uint32)
+                        out[r, k.shape[0]:] = k[0] + offs
             return out
 
         lr_arr = np.zeros(horizon, np.float32)
@@ -890,10 +942,7 @@ class SequentialEngine:
         counts = self.counts[np.asarray(participants)]
         if collect:
             losses = [float(x) for x in jax.device_get(losses)]
-            dm = {"participants": len(outs),
-                  "train_loss": (sum(losses) / len(losses))
-                  if losses else 0.0}
-            return outs, counts, dm
+            return outs, counts, _host_fedavg_metrics(losses, len(outs))
         return outs, counts
 
 

@@ -1,0 +1,8 @@
+"""Helper module for the interprocedural pair: encodes whatever it is
+handed.  Harmless alone — the leak only exists at call sites that hand
+it un-sanitized values (see pl001_interproc.py)."""
+from repro.comm import wire
+
+
+def ship_update(update):
+    return wire.encode(tuple(update))

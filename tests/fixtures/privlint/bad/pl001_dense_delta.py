@@ -1,0 +1,10 @@
+"""BAD (PL001): the dense client delta ships to the wire un-selected
+and un-noised — the server would see the exact per-client update."""
+from repro.comm import wire
+from repro.fed.engine import client_delta, local_train
+
+
+def upload_round(params, x, y, lr, key):
+    new_p = local_train(tuple(params), x, y, lr, key)
+    delta = client_delta(tuple(params), new_p)
+    return wire.encode(tuple(delta))

@@ -1,0 +1,12 @@
+"""BAD (PL001, interprocedural): the dense delta is routed through a
+helper in ANOTHER module; the finding must land inside
+``leak_helper.ship_update`` — taint crossed the module boundary via
+the call-site → parameter propagation."""
+from bad.leak_helper import ship_update
+from repro.fed.engine import client_delta, local_train
+
+
+def upload_via_helper(params, x, y, lr, key):
+    new_p = local_train(tuple(params), x, y, lr, key)
+    delta = client_delta(tuple(params), new_p)
+    return ship_update(delta)

@@ -1,0 +1,13 @@
+"""BAD (PL002): DP noise applied AFTER the payload was encoded — the
+un-noised coordinates have already left the privacy boundary."""
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.selection import select_gradients
+
+
+def ship(grads, skey, dkey, rate, sigma, clip):
+    masked, masks, _ = select_gradients(grads, rate, "magnitude",
+                                        key=skey)
+    payload = wire.encode(tuple(masked))
+    noised = privacy.gaussian_mechanism(payload, dkey, sigma, clip)
+    return noised

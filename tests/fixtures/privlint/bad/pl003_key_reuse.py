@@ -1,0 +1,30 @@
+"""BAD (PL003): PRNG key hygiene violations on the noise path — a
+loop-invariant key (every client draws the same noise) and one key
+consumed by two releases."""
+import jax
+
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.selection import select_gradients
+
+
+def run_rounds(grads_by_client, rate, sigma, clip, seed,
+               dp_releases=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for g in grads_by_client:
+        masked, masks, _ = select_gradients(g, rate, "magnitude",
+                                            key=key)
+        # `key` is never re-split inside the loop
+        noised = privacy.gaussian_mechanism(tuple(masked), key, sigma,
+                                            clip, masks=masks)
+        dp_releases += 1
+        out.append(wire.encode(tuple(noised)))
+    eps = privacy.epsilon_for(sigma, 1e-5, loops=dp_releases)
+    return out, eps
+
+
+def double_release(masked_a, masked_b, sigma, clip, key):
+    na = privacy.gaussian_mechanism(tuple(masked_a), key, sigma, clip)
+    nb = privacy.gaussian_mechanism(tuple(masked_b), key, sigma, clip)
+    return na, nb

@@ -1,0 +1,23 @@
+"""BAD (PL003): verbatim reduction of the worst real finding this rule
+caught — the fused-plan key padding in
+``repro/fed/engine.py BatchedEngine.prepare_fused_plan.pad_rows``
+(fixed in the same PR that shipped privlint).  Every padded slot gets
+slot 0's key row, so all padding slots share one noise stream."""
+import jax
+import numpy as np
+
+
+def pad_rows(rows, horizon, num_slots, trailing=(2,)):
+    out = np.zeros((horizon, num_slots) + trailing, np.uint32)
+    for r, k in enumerate(rows):
+        k = np.asarray(k)
+        if k.shape[0]:
+            out[r, :k.shape[0]] = k
+            out[r, k.shape[0]:] = k[0]
+    return out
+
+
+def plan_keys(key, horizon, num_slots):
+    rows = [jax.random.split(key, num_slots - 1)
+            for _ in range(horizon)]
+    return pad_rows(rows, horizon, num_slots)

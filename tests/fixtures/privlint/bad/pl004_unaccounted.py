@@ -1,0 +1,29 @@
+"""BAD (PL004): accounting skew — a noised payload emitted with no
+accountant update anywhere on the call chain, and a ledger that spends
+the budget twice for one emission."""
+import jax
+
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.selection import select_gradients
+
+
+def emit_unaccounted(grads, rate, sigma, clip, key):
+    k1, k2 = jax.random.split(key)
+    masked, masks, _ = select_gradients(grads, rate, "magnitude",
+                                        key=k1)
+    noised = privacy.gaussian_mechanism(tuple(masked), k2, sigma, clip,
+                                        masks=masks)
+    return wire.encode(tuple(noised))
+
+
+def emit_double_counted(grads, rate, sigma, clip, key, dp_releases):
+    k1, k2 = jax.random.split(key)
+    masked, masks, _ = select_gradients(grads, rate, "magnitude",
+                                        key=k1)
+    noised = privacy.gaussian_mechanism(tuple(masked), k2, sigma, clip,
+                                        masks=masks)
+    dp_releases += 1
+    payload = wire.encode(tuple(noised))
+    dp_releases += 1
+    return payload

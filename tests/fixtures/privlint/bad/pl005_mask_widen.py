@@ -1,0 +1,33 @@
+"""BAD (PL005): the reveal mask is widened AFTER the Gaussian noise was
+calibrated to it — the extra coordinates ship with zero noise budget.
+Includes the mask-mode compacted-geometry variant (re-appending rows
+with np.concatenate)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.selection import select_gradients
+
+
+def widen_after_noise(grads, extra_masks, rate, sigma, clip, skey,
+                      dkey, dp_releases=0):
+    masked, masks, _ = select_gradients(grads, rate, "magnitude",
+                                        key=skey)
+    noised = privacy.gaussian_mechanism(tuple(masked), dkey, sigma,
+                                        clip, masks=masks)
+    masks = jnp.logical_or(masks, extra_masks)
+    dp_releases += 1
+    return wire.encode(tuple(noised)), masks
+
+
+def widen_compacted_geometry(grads, keep_rows, rate, sigma, clip, skey,
+                             dkey, dp_releases=0):
+    masked, masks, _ = select_gradients(grads, rate, "magnitude",
+                                        key=skey)
+    noised = privacy.gaussian_mechanism(tuple(masked), dkey, sigma,
+                                        clip, masks=masks)
+    # compacted keep-mask geometry grown back after noising
+    masks = np.concatenate([masks, keep_rows], axis=0)
+    dp_releases += 1
+    return wire.encode(tuple(noised)), masks

@@ -1,0 +1,11 @@
+"""BAD (PL006): a per-client training loss written straight to the
+event log — events.jsonl is outside the privacy boundary."""
+from repro.fed.engine import local_train
+from repro.obs import trace
+
+
+def train_and_log(params, x, y, lr, key):
+    new_p, loss = local_train(tuple(params), x, y, lr, key,
+                              with_loss=True)
+    trace.event("client_done", loss=loss)
+    return new_p

@@ -1,0 +1,28 @@
+"""GOOD: mask-mode compacted geometry — the reveal set is only ever
+NARROWED after noising (validity zeroing, logical_and, kept-row
+slicing), which reveals strictly less than the noise was calibrated
+for.  Zero findings."""
+import jax
+import jax.numpy as jnp
+
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.selection import select_gradients
+
+
+def emit_compacted(delta, keep, valid, rate, sigma, clip, key,
+                   dp_releases=0):
+    ks, kd = jax.random.split(key)
+    masked, masks, _ = select_gradients(delta, rate, "magnitude",
+                                        key=ks)
+    noised = privacy.gaussian_mechanism(tuple(masked), kd, sigma, clip,
+                                        masks=masks)
+    # narrowing is allowed: zero invalid slots, intersect with the
+    # validity mask, then slice down to the kept (compacted) rows
+    noised = [jnp.where(valid, g, 0.0) for g in noised]
+    masks = [jnp.logical_and(m, valid) for m in masks]
+    kept = [g[k] for g, k in zip(noised, keep)]
+    kept_masks = [m[k] for m, k in zip(masks, keep)]
+    dp_releases += 1
+    eps = privacy.epsilon_for(sigma, 1e-5, loops=dp_releases)
+    return wire.encode(tuple(kept)), kept_masks, eps

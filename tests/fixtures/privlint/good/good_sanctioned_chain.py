@@ -1,0 +1,25 @@
+"""GOOD: the full sanctioned chain — selection → per-participant noise
+keys → release-ledger accounting → wire encode.  Zero findings."""
+import jax
+
+from repro.comm import wire
+from repro.core import privacy
+from repro.fed.engine import client_delta, local_train
+from repro.fed.selection import select_gradients
+
+
+def federated_round(params, shards, lr, key, rate, sigma, clip,
+                    dp_releases=0):
+    payloads = []
+    for x, y in shards:
+        key, kc, ks, kd = jax.random.split(key, 4)
+        new_p = local_train(tuple(params), x, y, lr, kc)
+        delta = client_delta(tuple(params), new_p)
+        masked, masks, _ = select_gradients(delta, rate, "magnitude",
+                                            key=ks)
+        noised = privacy.gaussian_mechanism(tuple(masked), kd, sigma,
+                                            clip, masks=masks)
+        dp_releases += 1
+        payloads.append(wire.encode(tuple(noised)))
+    eps = privacy.epsilon_for(sigma, 1e-5, loops=dp_releases)
+    return payloads, eps

@@ -1,0 +1,18 @@
+"""GOOD: telemetry receives only declared cohort-level aggregates, and
+the DP-off selection-only upload (the paper's base SCBF) is allowed on
+the wire — it makes no (ε, δ) claim.  Zero findings."""
+from repro.comm import wire
+from repro.fed.engine import client_delta, local_train
+from repro.fed.selection import select_gradients
+from repro.obs import metrics, trace
+
+
+def selection_only_round(params, x, y, lr, key, rate, skey):
+    new_p, loss = local_train(tuple(params), x, y, lr, key,
+                              with_loss=True)
+    delta = client_delta(tuple(params), new_p)
+    masked, masks, _ = select_gradients(delta, rate, "magnitude",
+                                        key=skey)
+    dm = metrics.offload(loss)
+    trace.event("round", train_loss=dm["train_loss"])
+    return wire.encode(tuple(masked)), dm

@@ -156,6 +156,53 @@ def test_suppression_comment_silences(tmp_path):
     assert len(run_paths([str(wrong)])[0]) == 1
 
 
+# a TL001 anchored to a *decorator* line of a nested def: the disable
+# comment must work anywhere in the decorated-def header (any decorator
+# line through the `def` line) or on the line above it — regression for
+# the comment previously having to sit on the exact decorator line.
+_DECORATED_JIT = textwrap.dedent("""
+    from functools import partial
+
+    import jax
+
+    def make_step(lr):{above}
+        @partial(jax.jit,{dec_suffix}
+                 static_argnums=(0,)){arg_suffix}
+        def step(n, p, x):{def_suffix}
+            return p - lr * x
+        return step
+""")
+
+
+def test_suppression_covers_decorated_def_header(tmp_path):
+    blank = {"above": "", "dec_suffix": "", "arg_suffix": "",
+             "def_suffix": ""}
+
+    noisy = tmp_path / "noisy.py"
+    noisy.write_text(_DECORATED_JIT.format(**blank))
+    findings = run_paths([str(noisy)])[0]
+    assert [f.rule for f in findings] == ["TL001"]
+
+    # the comment may sit on ANY header line, not just the finding's
+    for slot in ("dec_suffix", "arg_suffix", "def_suffix"):
+        quiet = tmp_path / f"quiet_{slot}.py"
+        quiet.write_text(_DECORATED_JIT.format(
+            **{**blank, slot: "  # tracelint: disable=TL001"}))
+        assert run_paths([str(quiet)])[0] == [], slot
+
+    # ...or on the line directly above the first decorator
+    above = tmp_path / "above.py"
+    above.write_text(_DECORATED_JIT.format(
+        **{**blank, "above": "\n        # tracelint: disable=TL001"}))
+    assert run_paths([str(above)])[0] == []
+
+    # the wrong rule code in the header does NOT silence it
+    wrong = tmp_path / "wrong.py"
+    wrong.write_text(_DECORATED_JIT.format(
+        **{**blank, "def_suffix": "  # tracelint: disable=TL004"}))
+    assert [f.rule for f in run_paths([str(wrong)])[0]] == ["TL001"]
+
+
 def test_finding_keys_survive_line_shifts(tmp_path):
     f = tmp_path / "m.py"
     f.write_text(_PER_CALL_JIT.format(suffix=""))
