@@ -32,6 +32,12 @@ BENCH_fed_engine.json so the perf trajectory accumulates):
    count (<= 2 asserted), and the steady-state (warmed-cache)
    fused-SCBFwP vs fused-SCBF time saving — the paper's claim that
    pruning saves wall time, now measured at fused speed.
+6. **Chaos** (``--chaos``) — the resilience tax: a fused run with the
+   fault model disarmed vs armed-with-zero-rates (bit-identical results
+   and <= 2 compiles asserted, overhead gated by
+   check_fed_regression.py), plus a seeded fault storm whose rejection
+   counters and no-NaN final params prove the admission gate holds
+   (docs/FED_ENGINE.md §Fault model & resilience).
 
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --pods 4
@@ -76,8 +82,9 @@ from repro.obs import EMITTER, metrics as obsm, report as obs_report, \
 # Version of the --json-out blob (checked by check_fed_regression.py —
 # a mismatched baseline is refused, not mis-compared).  2 = the
 # flight-recorder telemetry section (fused.telemetry + top-level
-# schema/emitter handshake).
-RESULT_SCHEMA = 2
+# schema/emitter handshake); 3 = the chaos section (fault-free
+# resilience overhead + seeded chaos-run stats).
+RESULT_SCHEMA = 3
 
 
 def _synthetic_clients(K: int, n_per_client: int, d: int, seed: int = 0):
@@ -465,6 +472,104 @@ def run_prune_section(quick: bool = True, loops: int = 16, fuse: int = 4,
                        "time_saving": time_saving}}
 
 
+def run_chaos_section(quick: bool = True, loops: int = 16, fuse: int = 4,
+                      K: int = 8):
+    """Section 6 (``--chaos``): the resilience tax and a seeded chaos run.
+
+    a) **fault-free overhead**: the fused medical run with the chaos
+       model disarmed vs armed-with-zero-rates (FaultInjector, the
+       server admission gate, and the plan-time (S, B) admit masks all
+       active, but nothing ever fires).  The two runs must be
+       bit-identical (participation, upload bytes, final params) and
+       the armed run must stay <= 2 fused compiles; the wall-clock
+       ratio is the resilience tax — target < 5%, CI-gated (with a
+       noise allowance, like telemetry) by check_fed_regression.py.
+    b) **seeded chaos run**: crashes, flaky links, bitflips, NaN and
+       norm-inflated poison, duplicates — the rejection counters come
+       off the flight recorder and the final params are asserted
+       finite (no corrupt update may ever reach ``ServerState``).
+    """
+    from repro.config import FaultConfig, TrainConfig
+    from repro.core.scbf import run_federated
+    from repro.data.medical import generate_cohort
+
+    adm = 4000 if quick else 12000
+    med = 128 if quick else 256
+    feats = (med, 256, 64, 1) if quick else (med, 512, 128, 1)
+    cohort = generate_cohort(num_admissions=adm, num_medicines=med,
+                             num_risk_medicines=med // 4,
+                             num_interactions=8, seed=0)
+
+    def tcfg(faults=None, max_norm=0.0):
+        return TrainConfig(
+            learning_rate=0.05, global_loops=loops, local_batch_size=64,
+            local_epochs=1, eval_every=loops,
+            scbf=ScbfConfig(upload_rate=0.10, num_clients=K),
+            fed=FedConfig(fuse_rounds=fuse,
+                          faults=faults if faults is not None
+                          else FaultConfig(),
+                          max_update_norm=max_norm))
+
+    def timed(cfg):
+        t0 = time.perf_counter()
+        res = run_federated(cohort, cfg, method="scbf",
+                            mlp_features=feats)
+        return time.perf_counter() - t0, res
+
+    # ---- a) fault-free overhead: disarmed vs armed-with-zero-rates ----
+    armed = FaultConfig(enabled=True)           # zero rates: never fires
+    _, res_plain = timed(tcfg())                # compile warmup, both
+    reset_fused_compile_count()
+    _, res_armed = timed(tcfg(armed))
+    compiles = fused_compile_count()
+    assert compiles <= 2, \
+        f"armed fused run must stay <= 2 compiles, got {compiles}"
+    for rp, ra in zip(res_plain.records, res_armed.records):
+        assert rp.num_participants == ra.num_participants \
+            and rp.sparse_bytes == ra.sparse_bytes, \
+            f"zero-injection run diverged at loop {rp.loop}"
+    for lp, la in zip(res_plain.final_params, res_armed.final_params):
+        for k in lp:
+            assert np.array_equal(np.asarray(lp[k]), np.asarray(la[k])), \
+                "zero-injection final params must be bit-identical"
+    # alternate repeats, min of each side — same rationale as telemetry
+    plain_ts, armed_ts = [], []
+    for _ in range(3):
+        plain_ts.append(timed(tcfg())[0])
+        armed_ts.append(timed(tcfg(armed))[0])
+    plain_s = min(plain_ts) / loops
+    armed_s = min(armed_ts) / loops
+    overhead = armed_s / plain_s - 1.0
+    emit(f"fed_chaos_armed_K{K}", armed_s * 1e6,
+         f"loops={loops};fuse_rounds={fuse};compiles={compiles};"
+         f"overhead_vs_disarmed={overhead:.1%}")
+
+    # ---- b) seeded chaos run: everything fires, nothing lands ----
+    chaos = FaultConfig(enabled=True, seed=7, crash_rate=0.1,
+                        net_fail_rate=0.1, duplicate_rate=0.1,
+                        bitflip_rate=0.1, nan_rate=0.1, poison_rate=0.1)
+    rec = obstrace.Recorder()
+    with obstrace.recording(recorder=rec):
+        chaos_t, res_chaos = timed(tcfg(chaos, max_norm=1e3))
+    for layer in res_chaos.final_params:
+        for k in layer:
+            assert np.isfinite(np.asarray(layer[k])).all(), \
+                "corrupt update leaked into the final params"
+    rejected = rec.counters.get("payloads_rejected", 0)
+    injected = sum(1 for e in rec.events if e["ev"] == "fault_injected")
+    assert injected > 0, "seeded chaos trace produced no faults"
+    emit(f"fed_chaos_run_K{K}", chaos_t / loops * 1e6,
+         f"loops={loops};faults_injected={injected};"
+         f"payloads_rejected={rejected}")
+    reasons = {k[len("rejected_"):]: v for k, v in rec.counters.items()
+               if k.startswith("rejected_")}
+    return {"loops": loops, "fuse_rounds": fuse, "K": K,
+            "disarmed_s": plain_s, "armed_s": armed_s,
+            "overhead": overhead, "compiles": compiles,
+            "chaos": {"total_s": chaos_t, "faults_injected": injected,
+                      "payloads_rejected": rejected, "reasons": reasons}}
+
+
 def run_pod_scaling(quick: bool = True, pods: int = 1):
     """Section 3: bucketed round sharded over a pod mesh vs one device."""
     if pods <= 1:
@@ -507,6 +612,10 @@ def main():
                     help="also run the fused-SCBFwP section (mask-mode "
                          "pruning: fused vs per-round-reshape, compile "
                          "count, steady-state pruning time saving)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the chaos section (fault-free "
+                         "resilience overhead, zero-injection parity, "
+                         "seeded fault-storm rejection stats)")
     ap.add_argument("--json-out", default=None,
                     help="also write the results as JSON (CI writes "
                          "BENCH_fed_engine.json)")
@@ -522,6 +631,7 @@ def main():
     fused = run_fused_section(quick=quick, events_out=args.events_out) \
         if args.fuse else None
     prune = run_prune_section(quick=quick) if args.prune else None
+    chaos = run_chaos_section(quick=quick) if args.chaos else None
     pod = run_pod_scaling(quick=quick, pods=_PODS)
 
     print("# K, seq_s/round, batched_s/round, speedup")
@@ -548,6 +658,13 @@ def main():
               f"-> {prune['fused_wp_s']:.2f}s ({prune['speedup']:.1f}x, "
               f"{prune['compiles']} compiles); steady-state pruning "
               f"saves {st['time_saving']:.1%} vs fused-SCBF")
+    if chaos:
+        ch = chaos["chaos"]
+        print(f"# chaos K={chaos['K']} S={chaos['fuse_rounds']}: armed "
+              f"zero-rate overhead {chaos['overhead']:+.1%} "
+              f"({chaos['compiles']} compiles, bit-identical); storm: "
+              f"{ch['faults_injected']} faults -> "
+              f"{ch['payloads_rejected']} rejected {ch['reasons']}")
     if pod:
         print(f"# pods={_PODS}: {pod['round_s_by_pods'][1]:.4f}s -> "
               f"{pod['round_s_by_pods'][_PODS]:.4f}s "
@@ -557,7 +674,8 @@ def main():
         blob = {"schema": RESULT_SCHEMA, "emitter": EMITTER,
                 "quick": quick, "k_scaling": rows,
                 "compile_counts": compiles,
-                "fused": fused, "prune": prune, "pod_scaling": pod}
+                "fused": fused, "prune": prune, "chaos": chaos,
+                "pod_scaling": pod}
         with open(args.json_out, "w") as f:
             json.dump(blob, f, indent=1)
         print(f"# wrote {args.json_out}")

@@ -27,6 +27,15 @@ runner cannot fail the gate spuriously:
     number lives in docs/OBSERVABILITY.md); the CI gate is looser
     because the overhead is a ratio of two *short* wall-clock timings
     and absolute jitter does not fully cancel.
+  * **chaos overhead** — the armed-with-zero-rates fused run must stay
+    within ``CHAOS_OVERHEAD_MAX`` of the disarmed run (the resilience
+    tax: plan-time fault draws, payload sealing, and the host-side
+    admission gate).  Target < 5% at real scale; the CI bound is
+    looser for the same short-timing-jitter reason as telemetry.
+    The armed run's compile count is gated monotone (<= baseline),
+    and the seeded fault storm must have rejected at least one payload
+    per reason the baseline rejected — a storm that stops rejecting a
+    fault class means the gate went inert, not that chaos got lucky.
 
 Both JSON blobs carry a ``schema`` version (bench RESULT_SCHEMA); a
 mismatch on either side is refused outright with a refresh
@@ -37,7 +46,8 @@ command CI runs (ci.yml bench-smoke), then commit the result with a
 note on what changed:
 
     PYTHONPATH=src python -m benchmarks.bench_fed_engine --quick --fuse \
-        --prune --pods 2 --json-out benchmarks/baselines/fed_engine.json
+        --prune --chaos --pods 2 \
+        --json-out benchmarks/baselines/fed_engine.json
 """
 from __future__ import annotations
 
@@ -47,8 +57,9 @@ import sys
 from typing import List
 
 RATIO_TOLERANCE = 0.75      # fresh fused ratio must be >= 75% of baseline
-SCHEMA = 2                  # bench_fed_engine.RESULT_SCHEMA this reader groks
+SCHEMA = 3                  # bench_fed_engine.RESULT_SCHEMA this reader groks
 TELEMETRY_OVERHEAD_MAX = 0.25   # CI bound; the target (<5%) is in the docs
+CHAOS_OVERHEAD_MAX = 0.25       # CI bound on the fault-free resilience tax
 
 
 def compare(fresh: dict, baseline: dict) -> List[str]:
@@ -134,6 +145,28 @@ def compare(fresh: dict, baseline: dict) -> List[str]:
     elif bp and not p:
         failures.append("prune section missing from fresh results "
                         "(baseline has one — run the bench with --prune)")
+
+    c, bc = fresh.get("chaos"), baseline.get("chaos")
+    if c and bc:
+        if c["overhead"] > CHAOS_OVERHEAD_MAX:
+            failures.append(
+                f"chaos: fault-free resilience overhead {c['overhead']:.1%}"
+                f" > {CHAOS_OVERHEAD_MAX:.0%} bound (the armed-but-idle "
+                "fault model must stay off the hot path — check for "
+                "extra compiles or per-round host sync)")
+        if c["compiles"] > bc["compiles"]:
+            failures.append(
+                f"chaos: {c['compiles']} armed fused compiles > baseline "
+                f"{bc['compiles']} (the <= 2 acceptance bar)")
+        for reason in bc["chaos"].get("reasons", {}):
+            if not c["chaos"].get("reasons", {}).get(reason):
+                failures.append(
+                    f"chaos: the seeded fault storm no longer rejects "
+                    f"any '{reason}' payloads (baseline does) — the "
+                    "admission gate for that fault class went inert")
+    elif bc and not c:
+        failures.append("chaos section missing from fresh results "
+                        "(baseline has one — run the bench with --chaos)")
     return failures
 
 

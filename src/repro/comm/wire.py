@@ -27,7 +27,9 @@ loop boundary, outside any jit trace.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import zlib
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -38,6 +40,17 @@ import numpy as np
 INDEX_BYTES = 4                      # int32 flat index (coo)
 
 CODECS = ("coo", "bitmap", "dense")
+
+
+class PayloadError(ValueError):
+    """A wire payload failed structural validation.
+
+    Raised before any index reaches a device scatter: JAX's ``.at[]``
+    silently *drops* out-of-range indices, so without this gate a
+    truncated or corrupted payload would "succeed" while quietly losing
+    updates.  Decoders and the server admission gate catch this and
+    reject the payload rather than applying it.
+    """
 
 
 def coo_bytes(nnz: int, size: int, itemsize: int = 4) -> int:
@@ -97,11 +110,38 @@ class LayerPayload:
 
 
 @dataclass(frozen=True)
+class PayloadMeta:
+    """Integrity envelope a sealed payload carries on the wire.
+
+    ``checksum`` is a CRC-32 over every layer's header fields and
+    buffers (``payload_checksum``), computed when the *sender* seals
+    the payload — any post-seal corruption (bit flips in transit)
+    fails verification server-side.  ``(client_id, round_index)`` is
+    the dedup nonce: the server admits each (client, round) upload at
+    most once, so replayed/duplicated payloads are rejected.
+    """
+
+    client_id: int
+    round_index: int
+    checksum: int
+
+    @property
+    def nonce(self) -> Tuple[int, int]:
+        return (self.client_id, self.round_index)
+
+
+@dataclass(frozen=True)
 class Payload:
-    """A full delta pytree on the wire (one client's upload)."""
+    """A full delta pytree on the wire (one client's upload).
+
+    ``meta`` is the optional integrity envelope (``seal``): unsealed
+    payloads still pass structural validation but skip checksum and
+    dedup checks — sealing is the driver's job at the trust boundary.
+    """
 
     treedef: jax.tree_util.PyTreeDef
     layers: Tuple[LayerPayload, ...]
+    meta: Optional[PayloadMeta] = None
 
     @property
     def nbytes(self) -> int:
@@ -156,7 +196,126 @@ def codec_breakdown(payloads) -> dict:
     return out
 
 
+def validate_layer(lp: LayerPayload, leaf_shape: Optional[Tuple[int, ...]]
+                   = None) -> None:
+    """Structural validation of one wire leaf; raises ``PayloadError``.
+
+    Checks everything a decoder is about to trust: codec name, nnz vs
+    buffer sizes, index dtype and bounds ``[0, size)``, bitmap length
+    and popcount, and (when ``leaf_shape`` is given) the declared shape
+    against the server's parameter leaf.  This must run before any
+    scatter: JAX drops out-of-range indices silently and numpy wraps
+    negative ones, so unvalidated corruption would otherwise be applied
+    *partially* instead of rejected.
+    """
+    if lp.codec not in CODECS:
+        raise PayloadError(f"unknown codec {lp.codec!r}")
+    if leaf_shape is not None and tuple(lp.shape) != tuple(leaf_shape):
+        raise PayloadError(f"payload shape {tuple(lp.shape)} != "
+                           f"param shape {tuple(leaf_shape)}")
+    size = lp.size
+    if not 0 <= lp.nnz <= size:
+        raise PayloadError(f"nnz {lp.nnz} outside [0, {size}]")
+    values = np.asarray(lp.values)
+    if values.ndim != 1:
+        raise PayloadError(f"values must be 1-D, got shape {values.shape}")
+    if np.dtype(values.dtype) != np.dtype(lp.dtype):
+        raise PayloadError(f"values dtype {values.dtype} != declared "
+                           f"{np.dtype(lp.dtype)}")
+    if lp.codec == "dense":
+        if values.size != size:
+            raise PayloadError(f"dense values size {values.size} != "
+                               f"leaf size {size}")
+        return
+    if values.size != lp.nnz:
+        raise PayloadError(f"{lp.codec} values size {values.size} != "
+                           f"nnz {lp.nnz}")
+    if lp.codec == "coo":
+        idx = lp.idx
+        if idx is None or not np.issubdtype(np.asarray(idx).dtype,
+                                            np.integer):
+            raise PayloadError("coo indices missing or non-integral")
+        idx = np.asarray(idx)
+        if idx.size != lp.nnz:
+            raise PayloadError(f"coo idx size {idx.size} != nnz {lp.nnz}")
+        if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= size):
+            raise PayloadError(
+                f"coo index out of bounds: [{int(idx.min())}, "
+                f"{int(idx.max())}] not within [0, {size})")
+        return
+    bitmap = lp.bitmap                                    # codec == bitmap
+    if bitmap is None:
+        raise PayloadError("bitmap payload missing its bitmap")
+    bitmap = np.asarray(bitmap)
+    if bitmap.dtype != np.uint8 or bitmap.size != math.ceil(size / 8):
+        raise PayloadError(f"bitmap buffer {bitmap.dtype}[{bitmap.size}] "
+                           f"!= uint8[{math.ceil(size / 8)}]")
+    pop = int(np.unpackbits(bitmap, count=size).sum())
+    tail = int(np.unpackbits(bitmap)[size:].sum())
+    if pop != lp.nnz or tail:
+        raise PayloadError(f"bitmap popcount {pop} (+{tail} tail bits) "
+                           f"!= nnz {lp.nnz}")
+
+
+def validate_payload(payload: Payload, params=None) -> None:
+    """Validate every leaf of a payload (``PayloadError`` on failure).
+
+    ``params``: optional server parameter pytree to check leaf count
+    and shapes against — the same checks ``apply_payloads`` enforces.
+    """
+    shapes = None
+    if params is not None:
+        leaves = jax.tree_util.tree_leaves(params)
+        if len(payload.layers) != len(leaves):
+            raise PayloadError(
+                f"payload has {len(payload.layers)} leaves, params have "
+                f"{len(leaves)}")
+        shapes = [tuple(np.shape(l)) for l in leaves]
+    for i, lp in enumerate(payload.layers):
+        try:
+            validate_layer(lp, shapes[i] if shapes else None)
+        except PayloadError as e:
+            raise PayloadError(f"leaf {i}: {e}") from None
+
+
+def payload_checksum(payload: Payload) -> int:
+    """CRC-32 over every layer's header fields and wire buffers."""
+    crc = 0
+    for lp in payload.layers:
+        header = f"{lp.codec}|{tuple(lp.shape)}|{np.dtype(lp.dtype)}|" \
+                 f"{lp.nnz}".encode()
+        crc = zlib.crc32(header, crc)
+        if lp.idx is not None:
+            crc = zlib.crc32(np.ascontiguousarray(lp.idx), crc)
+        if lp.bitmap is not None:
+            crc = zlib.crc32(np.ascontiguousarray(lp.bitmap), crc)
+        crc = zlib.crc32(np.ascontiguousarray(lp.values), crc)
+    return crc
+
+
+def seal(payload: Payload, client_id: int, round_index: int) -> Payload:
+    """Attach the integrity envelope: checksum + (client, round) nonce.
+
+    Called by the sender at the trust boundary, after any client-side
+    fault but before the bytes 'cross the network' — so wire-level
+    corruption is detectable and replays are dedupable server-side.
+    """
+    meta = PayloadMeta(client_id=int(client_id),
+                       round_index=int(round_index),
+                       checksum=payload_checksum(payload))
+    return dataclasses.replace(payload, meta=meta)
+
+
+def verify_checksum(payload: Payload) -> bool:
+    """True iff the sealed checksum matches the buffers (unsealed: True —
+    there is nothing to verify against)."""
+    if payload.meta is None:
+        return True
+    return payload_checksum(payload) == payload.meta.checksum
+
+
 def decode_leaf(lp: LayerPayload) -> jnp.ndarray:
+    validate_layer(lp)
     if lp.codec == "dense":
         flat = lp.values
     else:
@@ -203,12 +362,12 @@ def apply_payloads(params, payloads: Sequence[Payload]):
     ops: List[List[Tuple]] = [[] for _ in range(n)]
     for p in payloads:
         if len(p.layers) != n:
-            raise ValueError("payload structure does not match params")
+            raise PayloadError("payload structure does not match params")
         for i, lp in enumerate(p.layers):
-            if tuple(lp.shape) != tuple(leaves[i].shape):
-                raise ValueError(
-                    f"leaf {i}: payload shape {lp.shape} != "
-                    f"param shape {leaves[i].shape}")
+            # full structural gate (bounds/dtype/nnz) before any scatter:
+            # JAX would silently drop out-of-range indices (see
+            # PayloadError) — a corrupt payload must fail, not half-apply
+            validate_layer(lp, tuple(leaves[i].shape))
             if lp.codec == "dense":
                 ops[i].append(("dense", lp.values.astype(np.float32)))
             else:

@@ -255,13 +255,72 @@ class ScbfConfig:
 
 
 @dataclass(frozen=True)
+class ClockConfig:
+    """Simulated wall-clock model (repro.fed.clock.SimClock).
+
+    Per-client compute/network latency distributions plus a diurnal
+    availability trace, all a pure function of (seed, round, attempt):
+    client k's median compute time is ``compute_med_s`` scaled by a
+    lognormal per-client speed trait (``hetero_sigma``), with per-round
+    lognormal jitter (``compute_sigma``); network time composes the
+    same way.  When enabled, the sync scheduler replaces its coin-flip
+    straggler model with deadline-based cohort cuts: the round deadline
+    is the ``deadline_quantile`` of the cohort's latencies and misses
+    either drop or spill into the FedBuff buffer with clock-derived
+    staleness (``deadline_action``).
+    """
+
+    enabled: bool = False
+    compute_med_s: float = 10.0      # median local-training seconds
+    compute_sigma: float = 0.25      # per-round lognormal jitter (compute)
+    hetero_sigma: float = 0.6        # per-client speed spread (lognormal)
+    net_med_s: float = 2.0           # median upload/network seconds
+    net_sigma: float = 0.5           # per-round lognormal jitter (network)
+    deadline_quantile: float = 0.9   # server waits for this cohort quantile
+    deadline_action: str = "drop"    # drop | spill (into the FedBuff buffer)
+    # diurnal churn: availability oscillates over the simulated day with
+    # a per-client phase (timezone); amplitude 0 = always-on clients
+    availability_mean: float = 1.0
+    diurnal_amplitude: float = 0.0
+    day_s: float = 86400.0
+    round_gap_s: float = 0.0         # fixed server overhead between rounds
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault injection (repro.fed.faults.FaultInjector).
+
+    Every rate is per sampled participant per round; outcomes are a
+    pure function of (seed, round, attempt, client) so any fault trace
+    replays deterministically from its seed.  ``bitflip``/``nan``/
+    ``poison`` are mutually exclusive per client (their rates must sum
+    to <= 1).  Transient network failures retry with exponential
+    backoff (``net_backoff_s * 2^i``) up to ``net_retries`` times
+    before the upload is lost.
+    """
+
+    enabled: bool = False
+    seed: int = 0                    # fault-trace seed (independent of run)
+    crash_rate: float = 0.0          # P(client crashes mid-round, no upload)
+    net_fail_rate: float = 0.0       # P(one send attempt fails)
+    net_retries: int = 3             # client retries before giving up
+    net_backoff_s: float = 1.0       # backoff base (doubles per retry)
+    duplicate_rate: float = 0.0      # P(payload is replayed to the server)
+    bitflip_rate: float = 0.0        # P(one wire bit flips post-seal)
+    nan_rate: float = 0.0            # P(client update is NaN/Inf)
+    poison_rate: float = 0.0         # P(client ships a norm-inflated update)
+    poison_scale: float = 16.0       # poisoned norm = scale * norm bound
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """Cross-device federation scenario knobs (repro.fed).
 
     The seed orchestrator hard-wired 5 always-on clients in a Python
     loop; these knobs describe the cross-device regimes the federation
     engine simulates: cohort sampling, dropout/stragglers, buffered
-    async (FedBuff-style), and non-IID hospital silos.
+    async (FedBuff-style), non-IID hospital silos, and (clock/faults)
+    chaos-hardened operation under a simulated wall-clock fault model.
     """
 
     engine: str = "batched"          # batched (vmapped cohort) | sequential
@@ -294,6 +353,20 @@ class FedConfig:
     # --- data partition across clients ---
     partition: str = "iid"           # iid (equal shards) | dirichlet
     dirichlet_alpha: float = 0.5     # label-skew concentration (lower=worse)
+    # --- chaos hardening (repro.fed.clock / repro.fed.faults) ---
+    clock: ClockConfig = field(default_factory=ClockConfig)
+    faults: FaultConfig = field(default_factory=FaultConfig)
+    # server-side admission control (repro.fed.strategy): structural
+    # validation, checksum verification and nonfinite rejection are
+    # always on; the norm gate turns on with max_update_norm > 0
+    max_update_norm: float = 0.0     # L2 bound on an admitted update; 0=off
+    norm_action: str = "reject"      # reject | clip (scale into the bound)
+    # round-level quorum: fewer than this many participants expected to
+    # survive validation triggers a bounded re-plan of the round with
+    # backoff instead of stepping on garbage (0 = no quorum)
+    min_valid_participants: int = 0
+    round_retries: int = 2           # re-plans per round on a quorum miss
+    retry_backoff_s: float = 30.0    # simulated wait before each re-plan
 
 
 @dataclass(frozen=True)

@@ -254,9 +254,13 @@ def run_federated(cohort: MedicalCohort,
     # deferred: repro.fed modules import repro.core.* at module scope, so
     # importing them here (not at module top) keeps repro.core importable
     # from either direction
+    from repro.fed.clock import SimClock
     from repro.fed.engine import make_engine
+    from repro.fed.faults import (FaultInjector, Resilience,
+                                  apply_payload_faults)
     from repro.fed.scheduler import make_scheduler
-    from repro.fed.strategy import RoundContribution, make_strategy
+    from repro.fed.strategy import (AdmissionPolicy, RoundContribution,
+                                    admit_payloads, make_strategy)
 
     cfg: ScbfConfig = train_cfg.scbf
     fed = train_cfg.fed
@@ -285,6 +289,34 @@ def run_federated(cohort: MedicalCohort,
                              "in-flight clients; fedbuff needs "
                              "prune_impl='mask' (run-constant geometry)")
 
+    # ---- resilience configuration (repro.fed.clock / .faults) ----
+    clock_on = fed.clock.enabled
+    faults_on = fed.faults.enabled
+    spill_mode = clock_on and fed.clock.deadline_action == "spill"
+    if faults_on and method != "scbf":
+        raise ValueError(
+            "fault injection corrupts the sparse scbf upload pipeline; "
+            "method='fedavg' ships full weight pytrees with no wire "
+            "payload to corrupt — refusing a silently-inert fault plan")
+    if fed.max_update_norm > 0 and method != "scbf":
+        raise ValueError(
+            "max_update_norm bounds sparse scbf payload norms; the "
+            "fedavg path has no payload to gate — refusing to run with "
+            "a configured bound silently off")
+    if fed.min_valid_participants > 0 and fed.mode == "fedbuff":
+        raise ValueError(
+            "round-level quorum retries re-plan the round; fedbuff "
+            "planning mutates in-flight client state on every plan "
+            "call, so a replanned attempt would corrupt it — "
+            "min_valid_participants needs sync mode")
+    if spill_mode and cfg.prune:
+        raise ValueError(
+            "deadline spilling delivers payloads emitted against an "
+            "earlier round's keep-masks; pruning changes the masks "
+            "between emission and arrival, so the spilled indices "
+            "would remap wrong — use deadline_action='drop' with "
+            "pruning")
+
     feats = mlp_features or (cohort.num_features, 256, 64, 1)
     key = jax.random.PRNGKey(train_cfg.seed)
     key, init_key = jax.random.split(key)
@@ -294,12 +326,34 @@ def run_federated(cohort: MedicalCohort,
     eng = make_engine(engine or fed.engine, clients,
                       train_cfg.local_batch_size, train_cfg.local_epochs,
                       bucket=fed.bucket, pods=fed.pods)
-    scheduler = make_scheduler(fed, cfg.num_clients, train_cfg.seed)
-    strategy = make_strategy(method, cfg, fed)
+    clock = SimClock(cfg.num_clients, fed.clock, seed=train_cfg.seed) \
+        if clock_on else None
+    scheduler = make_scheduler(fed, cfg.num_clients, train_cfg.seed,
+                               clock=clock)
+    injector = FaultInjector(cfg.num_clients, fed.faults) \
+        if faults_on else None
+    # the admission gate arms whenever payloads can be hostile (fault
+    # injection) or a norm bound is configured; otherwise the strategies
+    # keep their zero-overhead fault-free hot path
+    policy = AdmissionPolicy(max_update_norm=fed.max_update_norm,
+                             norm_action=fed.norm_action) \
+        if (faults_on or fed.max_update_norm > 0) else None
+    strategy = make_strategy(method, cfg, fed, policy=policy)
+    resil = Resilience(scheduler, clock, injector, fed)
+    if fed.min_valid_participants > 0 and \
+            fed.min_valid_participants > scheduler.max_participants:
+        raise ValueError(
+            f"min_valid_participants={fed.min_valid_participants} can "
+            f"never be met: the scheduler samples at most "
+            f"{scheduler.max_participants} clients per round — every "
+            "round would exhaust its retries and miss quorum")
     state = strategy.init(params)
     # fedbuff only: stale version snapshots (sync trains on the current
     # params, so keeping the initial model alive would be pure waste)
     history = {0: params} if fed.mode == "fedbuff" else None
+    # spill mode: round-keyed snapshots — a spilled client trains from
+    # the params of the round it was sampled in, delivered rounds later
+    round_history = {0: params} if spill_mode else None
     # host-side lr table: one device dispatch for the whole run instead
     # of a float() sync per loop, and the fused path's (S,) lr array
     lrs = _lr_table(train_cfg)
@@ -319,6 +373,13 @@ def run_federated(cohort: MedicalCohort,
     amplify = dp_on and cfg.dp_amplification
     amp_q = 1.0
     if amplify:
+        if clock_on:
+            raise ValueError(
+                "subsampled amplification assumes a uniform i.i.d. "
+                "per-round sample; the simulated clock restricts "
+                "sampling to currently-available clients (diurnal "
+                "churn), which is not one — refusing to report a "
+                "silently-wrong amplified ε")
         if fed.mode == "fedbuff":
             raise ValueError(
                 "subsampled amplification assumes an i.i.d. per-round "
@@ -421,11 +482,38 @@ def run_federated(cohort: MedicalCohort,
     # anything else falls back to the per-round loop below
     use_fused = (int(fed.fuse_rounds) > 1 and fed.mode == "sync"
                  and (not cfg.prune or mask_prune)
-                 and eng.name == "batched")
+                 and eng.name == "batched" and not spill_mode)
     if use_fused:
-        _run_fused(cohort, train_cfg, method, eng, scheduler, state, key,
+        # the fused path aggregates on device from per-slot admit masks
+        # decided at PLAN time (repro.fed.faults); a host-side admission
+        # verdict that cannot be predicted at plan time would silently
+        # diverge from what the device folded in — refuse those combos
+        # up front rather than diverge
+        if fed.max_update_norm > 0 and not faults_on:
+            raise ValueError(
+                "the fused path cannot run a host-side norm gate over "
+                "its on-device aggregation; arm the fault model "
+                "(FaultConfig.enabled) so admission is planned, or use "
+                "fuse_rounds=1")
+        if faults_on and fed.max_update_norm > 0 \
+                and fed.norm_action == "clip":
+            raise ValueError(
+                "norm_action='clip' rescales admitted payloads on the "
+                "host; the fused path aggregates the raw on-device "
+                "deltas, so clipping cannot take effect — use "
+                "norm_action='reject' or fuse_rounds=1")
+        if faults_on and fed.faults.poison_rate > 0 \
+                and not (fed.max_update_norm > 0
+                         and fed.norm_action == "reject"):
+            raise ValueError(
+                "poisoned (norm-inflated) updates are only excludable "
+                "at plan time when a reject-mode norm gate is armed "
+                "(max_update_norm > 0, norm_action='reject'); without "
+                "one the fused path would fold poison into the model — "
+                "arm the gate or use fuse_rounds=1")
+        _run_fused(cohort, train_cfg, method, eng, resil, state, key,
                    lrs, dp_releases, result, _epsilons, _metrics, verbose,
-                   pruner, collect)
+                   pruner, collect, injector=injector, policy=policy)
         _finish_telemetry(result, counts0)
         return result
 
@@ -437,17 +525,35 @@ def run_federated(cohort: MedicalCohort,
         # stays outside, as before
         with obstrace.span("round", loop=loop) as sp:
             lr = float(lrs[loop])
-            plan = scheduler.plan(loop, state.version)
+            ar = resil.plan_round(loop, state.version)
+            plan = ar.plan
             part = plan.participants
             P = plan.num_participants
+            if method == "scbf":
+                # aborted quorum attempts trained and uploaded before
+                # the server discarded them — their privacy spend is
+                # real and must never be under-reported.  Each aborted
+                # attempt is a DISTINCT (simulated) upload, so two
+                # increments on this path are two releases, not one
+                # double-counted — charging them is conservative in
+                # exactly the direction DP accounting must err.
+                for aborted in ar.aborted_arrivers:
+                    if aborted.size:
+                        dp_releases[np.asarray(aborted)] += 1  # privlint: disable=PL004
 
             key, ckeys, skeys, dp_keys = _derive_round_keys(
                 key, cfg.num_clients, part, P)
 
             payloads, stats, dm = [], [], None
+            wire_payloads = []
             if P:
                 if fed.mode == "fedbuff":
                     params_for = [history[state.version - int(tau)]
+                                  for tau in plan.staleness]
+                elif spill_mode:
+                    # spilled arrivals trained from the round they were
+                    # sampled in (staleness = rounds in flight)
+                    params_for = [round_history[loop - int(tau)]
                                   for tau in plan.staleness]
                 else:
                     params_for = state.params
@@ -461,15 +567,33 @@ def run_federated(cohort: MedicalCohort,
                     (payloads, stats, dm) = out if collect else \
                         (out[0], out[1], None)
                     dp_releases[np.asarray(part)] += 1
-                    # mask mode ships effective-geometry payloads; the
-                    # server stores full geometry, so aggregation applies
-                    # the expanded (index-remapped) view
-                    agg_payloads = payloads if keep_eff is None else \
-                        pruning.expand_payloads(payloads, keep_eff,
-                                                state.params)
+                    wire_payloads = payloads
+                    nx = eng.counts[np.asarray(part)]
+                    stal = np.asarray(plan.staleness)
+                    cl = np.asarray(part)
+                    if injector is not None and payloads:
+                        # client faults → seal → wire faults → replays
+                        wire_payloads, dup_src = apply_payload_faults(
+                            payloads, cl, ar.corrupt, ar.duplicated,
+                            loop, ar.attempts - 1, fed.faults,
+                            fed.max_update_norm)
+                        if dup_src:
+                            nx = np.concatenate([nx, nx[dup_src]])
+                            stal = np.concatenate([stal, stal[dup_src]])
+                            cl = np.concatenate([cl, cl[dup_src]])
+                    # mask mode ships effective-geometry payloads whose
+                    # checksums seal the wire bytes; the strategy admits
+                    # on those and expands the survivors to the server's
+                    # full geometry just before application
+                    expand = None
+                    if keep_eff is not None:
+                        expand = (lambda ps, _k=keep_eff,
+                                  _ref=state.params:
+                                  pruning.expand_payloads(ps, _k, _ref))
                     contrib = RoundContribution(
-                        num_examples=eng.counts[np.asarray(part)],
-                        staleness=plan.staleness, payloads=agg_payloads)
+                        num_examples=nx, staleness=stal,
+                        payloads=wire_payloads, clients=cl,
+                        expand=expand)
                 else:
                     out = eng.fedavg_round(params_for, part, lr, ckeys,
                                            collect=collect)
@@ -477,22 +601,35 @@ def run_federated(cohort: MedicalCohort,
                         (out[0], out[1], None)
                     contrib = RoundContribution(
                         num_examples=counts, staleness=plan.staleness,
-                        client_params=client_params)
-                state = strategy.aggregate(state, contrib)
+                        client_params=client_params,
+                        clients=np.asarray(part))
+                if ar.quorum_ok:
+                    state = strategy.aggregate(state, contrib)
+                # terminal quorum miss: the cohort trained and uploaded,
+                # but the server refuses to step on a sub-quorum round
+                # (the planner already emitted the quorum_miss event)
             params = state.params
             if fed.mode == "fedbuff":
                 history[state.version] = params
                 live = scheduler.referenced_versions() | {state.version}
                 history = {v: p for v, p in history.items() if v in live}
+            elif spill_mode:
+                round_history[loop + 1] = params
+                live = scheduler.referenced_rounds() | {loop + 1}
+                round_history = {r: p for r, p in round_history.items()
+                                 if r in live}
 
             # ---- communication accounting ----
             if method == "scbf":
                 up_frac = float(np.mean([s.upload_fraction
                                          for s in stats])) if stats else 0.0
                 # measured bytes of the encoded payloads (single source
-                # of truth: repro.comm.wire), not a mask-count model
-                sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
-                    if payloads else 0
+                # of truth: repro.comm.wire), not a mask-count model —
+                # wire_payloads includes replayed duplicates: bytes that
+                # really crossed the network
+                sparse_bytes = int(np.sum([p.nbytes
+                                           for p in wire_payloads])) \
+                    if wire_payloads else 0
                 dense_bytes = int(np.sum([p.dense_nbytes
                                           for p in payloads])) \
                     if payloads else 0
@@ -594,10 +731,10 @@ def _round_event_fields(rec: LoopRecord, plan, pruner, dm,
 
 
 def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
-               eng, scheduler, state, key, lrs: np.ndarray,
+               eng, resil, state, key, lrs: np.ndarray,
                dp_releases: np.ndarray, result: RunResult,
                _epsilons, _metrics, verbose: bool, pruner=None,
-               collect: bool = False) -> None:
+               collect: bool = False, injector=None, policy=None) -> None:
     """The fused round loop: S sync rounds per device program.
 
     Each chunk is pre-planned into static (S, B) participant/validity
@@ -627,9 +764,12 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
     masked full geometry otherwise).
     """
     from repro.fed.cohort import fused_chunk_len
+    from repro.fed.faults import apply_payload_faults
+    from repro.fed.strategy import RoundContribution, admit_payloads
 
     cfg: ScbfConfig = train_cfg.scbf
     fed = train_cfg.fed
+    scheduler = resil.scheduler
     S = int(fed.fuse_rounds)
     B = eng.fused_num_slots(scheduler.max_participants)
     total_loops = train_cfg.global_loops
@@ -663,9 +803,16 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
         # jax.profiler traces line up with the event log
         with obstrace.span("fused_chunk", annotate=train_cfg.obs.annotate,
                            loop0=loop0, rounds=chunk) as sp:
-            plans = scheduler.plan_horizon(loop0, chunk, state.version)
+            # the resilient planner replaces plan_horizon: same
+            # scheduler.plan sequence underneath (bit-parity when the
+            # fault model is off), plus fault outcomes and quorum
+            # resolved per round at plan time — which is what lets the
+            # admission verdicts fold into the static (S, B) admit mask
+            ars = [resil.plan_round(loop0 + i, state.version)
+                   for i in range(chunk)]
+            plans = [ar.plan for ar in ars]
             parts, cks, sks, dks, wts = [], [], [], [], []
-            for plan in plans:
+            for ar, plan in zip(ars, plans):
                 part = plan.participants
                 P = plan.num_participants
                 # _derive_round_keys is the single key-stream contract,
@@ -678,20 +825,24 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                 dks.append(np.asarray(dk))
                 parts.append(part)
                 if method == "fedavg":
-                    if P:
+                    if P and ar.quorum_ok:
                         n = eng.counts[np.asarray(part)].astype(np.float64)
                         wts.append((n / n.sum()).astype(np.float32))
                     else:
-                        wts.append(np.zeros(0, np.float32))
+                        # quorum-missed rounds must not step: all-zero
+                        # weights pass the fedavg carry through bitwise
+                        wts.append(np.zeros(P, np.float32))
             keep_eff = pruner.emission_keep if pruner is not None else None
             eff = obsm.effective_leaf_sizes(state.params, keep_eff) \
                 if (collect and method == "scbf" and keep_eff is not None) \
+                else None
+            admits = [ar.admit_mask() for ar in ars] if resil.active \
                 else None
             fplan = eng.prepare_fused_plan(
                 parts, lrs[loop0:loop0 + chunk], cks, sks, dks,
                 horizon=1 if prune_active else S, num_slots=B,
                 weights=wts if method == "fedavg" else None,
-                eff_sizes=eff)
+                eff_sizes=eff, admit=admits)
             round_metrics = None
             if method == "scbf":
                 out = eng.fused_scbf_chunk(
@@ -719,7 +870,12 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                 else:
                     new_params = out
                 emitted = [([], [])] * chunk
-            applied = sum(1 for p in plans if p.num_participants)
+            # a round bumps the version iff it passed quorum AND at
+            # least one slot was admitted — the same rule ScbfSum's
+            # admission gate applies on the per-round path (fault-free,
+            # admit == valid, this is the old "any participants" count)
+            applied = sum(1 for ar in ars
+                          if ar.quorum_ok and bool(ar.admit_mask().any()))
             state = dataclasses.replace(state, params=new_params,
                                         version=state.version + applied)
             if prune_active:
@@ -737,16 +893,57 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
         wall_each = sp.elapsed / chunk
 
         n_params, hidden = _model_stats()
-        for r, plan in enumerate(plans):
+        for r, (ar, plan) in enumerate(zip(ars, plans)):
             loop = loop0 + r
             P = plan.num_participants
             payloads, stats = emitted[r]
             dm = round_metrics[r] if round_metrics is not None else None
             if method == "scbf":
+                # aborted quorum attempts are distinct uploads (fresh
+                # keys each attempt): two increments = two releases
+                for aborted in ar.aborted_arrivers:
+                    if aborted.size:
+                        dp_releases[np.asarray(aborted)] += 1  # privlint: disable=PL004
+                wire_payloads = payloads
+                if injector is not None and payloads:
+                    # re-run the fault pipeline + the REAL admission
+                    # gate on the emitted wire artifacts: events/counts
+                    # match the per-round path, and the verdicts are
+                    # checked against the plan the device already
+                    # folded in (any divergence is a hard error, never
+                    # a silent one)
+                    cl = np.asarray(plan.participants)
+                    wire_payloads, dup_src = apply_payload_faults(
+                        payloads, cl, ar.corrupt, ar.duplicated, loop,
+                        ar.attempts - 1, fed.faults, fed.max_update_norm)
+                    if ar.quorum_ok:
+                        if dup_src:
+                            cl = np.concatenate([cl, cl[dup_src]])
+                        gate_contrib = RoundContribution(
+                            num_examples=np.zeros(len(wire_payloads),
+                                                  np.int64),
+                            staleness=np.zeros(len(wire_payloads),
+                                               np.int64),
+                            payloads=wire_payloads, clients=cl)
+                        _, kept_idx = admit_payloads(state, gate_contrib,
+                                                     policy)
+                        planned = {i for i in range(P)
+                                   if not ar.will_reject[i]}
+                        if set(kept_idx) != planned:
+                            raise RuntimeError(
+                                f"fused admission mismatch at loop "
+                                f"{loop}: the device folded slots "
+                                f"{sorted(planned)} but the admission "
+                                f"gate admitted {sorted(kept_idx)} — "
+                                "an update failed a gate the planner "
+                                "could not predict (e.g. a natural "
+                                "nonfinite or norm violation); rerun "
+                                "with fuse_rounds=1")
                 up_frac = float(np.mean([s.upload_fraction
                                          for s in stats])) if stats else 0.0
-                sparse_bytes = int(np.sum([p.nbytes for p in payloads])) \
-                    if payloads else 0
+                sparse_bytes = int(np.sum([p.nbytes
+                                           for p in wire_payloads])) \
+                    if wire_payloads else 0
                 dense_bytes = int(np.sum([p.dense_nbytes
                                           for p in payloads])) \
                     if payloads else 0

@@ -185,9 +185,9 @@ def _scbf_pass(params, xs, ys, ws, lr, ckeys, skeys, dp_keys, valid,
     return out
 
 
-def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
-                       ckeys, skeys, dp_keys, nmasks=None, eff_sizes=None,
-                       *, batch_size: int,
+def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, admit,
+                       lrs, ckeys, skeys, dp_keys, nmasks=None,
+                       eff_sizes=None, *, batch_size: int,
                        epochs: int, masked_loss: bool, upload_rate: float,
                        selection_mode: str, score_norm: bool,
                        dp_noise: float, dp_clip: float,
@@ -211,9 +211,19 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
     ``(S,)``-stacked per-round ``MetricsCarry`` when ``collect``
     (repro.obs device telemetry; the carry rides the scan ys, so the
     parameter math and the host-transfer discipline are untouched).
+
+    ``admit`` is the (S, B) server-admission mask (repro.fed.faults):
+    slots the admission gate will reject — corrupted, poisoned, quorum
+    casualties — contribute exact zeros to the on-device aggregation
+    while their *emitted* deltas stay untouched (the wire artifacts
+    must still carry the corrupt bytes for accounting and events).
+    Fault-free plans pass admit == valid, and ``jnp.where(True, t, 0)``
+    is ``t`` bitwise, so the fault-free trajectory is bit-identical —
+    and the program shape never changes, so the <= 2 compile bound
+    holds with the fault model active.
     """
     def round_body(p, rnd):
-        idx, v, lr, ck, sk, dk = rnd
+        idx, v, adm, lr, ck, sk, dk = rnd
         xs, ys, ws = x_all[idx], y_all[idx], w_all[idx]
 
         def one(x, y, w, c, s, d, vv):
@@ -235,11 +245,15 @@ def _fused_scbf_rounds(params, x_all, y_all, w_all, part_idx, valid, lrs,
         else:
             masked, masks = out
             ys_out = (masked, masks)
-        return scbf_sum_step(p, masked, neuron_masks=nmasks), ys_out
+        admitted = tuple(
+            {k: jnp.where(adm.reshape(adm.shape + (1,) * (t.ndim - 1)),
+                          t, jnp.zeros_like(t))
+             for k, t in layer.items()} for layer in masked)
+        return scbf_sum_step(p, admitted, neuron_masks=nmasks), ys_out
 
     new_p, ys_s = jax.lax.scan(
         round_body, tuple(params),
-        (part_idx, valid, lrs, ckeys, skeys, dp_keys))
+        (part_idx, valid, admit, lrs, ckeys, skeys, dp_keys))
     if collect:
         masked_s, masks_s, met_s = ys_s
         return new_p, masked_s, masks_s, met_s
@@ -473,6 +487,8 @@ class FusedPlan:
     eff_sizes: Optional[jnp.ndarray] = None  # (n_leaves,) i32 — obs byte
     # pricing under mask-mode SCBFwP (device-placed at plan build so the
     # chunk stays transfer-free); None prices full leaf sizes statically
+    admit: Optional[jnp.ndarray] = None     # (S, B) bool server admission
+    # mask (repro.fed.faults) — None means admit == valid (no faults)
 
 
 def _pad_slots(arr, num_slots: int):
@@ -701,13 +717,15 @@ class BatchedEngine:
                            ckeys: Sequence, skeys: Sequence,
                            dp_keys: Sequence, horizon: int,
                            num_slots: int, weights=None,
-                           eff_sizes=None) -> FusedPlan:
+                           eff_sizes=None, admit=None) -> FusedPlan:
         """Assemble + device-place one chunk's static (S, B) plan.
 
         Per-round key rows pad with distinct derived keys and a short
         tail chunk pads with all-invalid rounds, exactly mirroring the
         per-round path's ``_pad_slots``/``_pad_key_slots`` semantics —
         this is where every host→device transfer for the chunk happens.
+        ``admit`` (repro.fed.faults): per-round (P,) bool admission
+        rows; None admits every valid slot (the fault-free plan).
         """
         if self.mesh is not None and not self._cohort_replicated:
             # fused chunks gather cohorts on device, so the shards must
@@ -750,9 +768,17 @@ class BatchedEngine:
                 w = np.asarray(w, np.float32)
                 wts[r, :w.shape[0]] = w
 
+        if admit is None:
+            admit_arr = np.asarray(valid, dtype=bool)
+        else:
+            admit_arr = np.zeros((horizon, num_slots), dtype=bool)
+            for r, row in enumerate(admit):
+                row = np.asarray(row, dtype=bool)
+                admit_arr[r, :row.shape[0]] = row
+
         key_dim = (2,)
         arrs = {
-            "part_idx": part_idx, "valid": valid,
+            "part_idx": part_idx, "valid": valid, "admit": admit_arr,
             "ckeys": pad_rows(ckeys, key_dim),
             "skeys": pad_rows(skeys, key_dim),
             "dp_keys": pad_rows(dp_keys, key_dim),
@@ -778,7 +804,7 @@ class BatchedEngine:
                          valid=dev["valid"], lrs=lr_dev,
                          ckeys=dev["ckeys"], skeys=dev["skeys"],
                          dp_keys=dev["dp_keys"], weights=wts_dev,
-                         eff_sizes=eff_dev)
+                         eff_sizes=eff_dev, admit=dev["admit"])
 
     def fused_scbf_chunk(self, params, plan: FusedPlan, cfg: ScbfConfig,
                          nmasks=None, collect: bool = False):
@@ -800,10 +826,11 @@ class BatchedEngine:
             if nmasks is not None:
                 nmasks = jax.device_put(tuple(nmasks), self._mask_sharding)
         fused_scbf, _ = _fused_programs()
+        admit = plan.admit if plan.admit is not None else plan.valid
         with self._mesh_ctx():
             return fused_scbf(
                 p, self.cohort.x, self.cohort.y, self.cohort.w,
-                plan.part_idx, plan.valid, plan.lrs,
+                plan.part_idx, plan.valid, admit, plan.lrs,
                 plan.ckeys, plan.skeys, plan.dp_keys, nmasks,
                 plan.eff_sizes,
                 batch_size=self.batch_size, epochs=self.epochs,

@@ -23,7 +23,7 @@ staleness and all (tests/test_fed_engine.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -54,6 +54,15 @@ class RoundPlan:
     sampled: np.ndarray           # invited (sync) / newly started (fedbuff)
     dropped: np.ndarray           # lost to dropout this round
     stragglers: np.ndarray        # flagged slow this round
+    # wall-clock fields, set only under the simulated clock
+    # (repro.fed.clock): the round deadline, each participant's upload
+    # latency (0.0 for spilled arrivals — they were already in flight),
+    # which sampled clients spilled past the deadline, and the quorum
+    # attempt this plan belongs to (repro.fed.faults.Resilience)
+    deadline_s: Optional[float] = None
+    latency_s: Optional[np.ndarray] = None
+    spilled: Optional[np.ndarray] = None
+    attempt: int = 0
 
     @property
     def num_participants(self) -> int:
@@ -62,8 +71,10 @@ class RoundPlan:
     def telemetry(self) -> dict:
         """Scheduler fields of the flight recorder's ``round`` event
         (repro.obs, docs/OBSERVABILITY.md): cohort composition plus the
-        FedBuff staleness profile (zeros under sync scheduling)."""
-        return {
+        FedBuff staleness profile (zeros under sync scheduling).  The
+        deadline/latency fields appear only under the simulated clock,
+        so the fault-free event schema is unchanged."""
+        out = {
             "sampled": int(self.sampled.size),
             "dropped": int(self.dropped.size),
             "stragglers": int(self.stragglers.size),
@@ -72,17 +83,55 @@ class RoundPlan:
             "staleness_max": int(np.max(self.staleness))
             if self.staleness.size else 0,
         }
+        if self.deadline_s is not None:
+            out["deadline_s"] = round(float(self.deadline_s), 6)
+            out["attempt"] = int(self.attempt)
+            if self.latency_s is not None and self.latency_s.size:
+                out["latency_mean_s"] = round(
+                    float(np.mean(self.latency_s)), 6)
+                out["latency_max_s"] = round(
+                    float(np.max(self.latency_s)), 6)
+            if self.spilled is not None:
+                out["spilled"] = int(self.spilled.size)
+        return out
 
 
 class SyncScheduler:
-    """Per-round client sampling with dropout and deadline stragglers."""
+    """Per-round client sampling with dropout and deadline stragglers.
 
-    def __init__(self, num_clients: int, cfg: FedConfig, seed: int = 0):
+    With a ``SimClock`` attached (repro.fed.clock) the coin-flip
+    dropout/straggler model is replaced by **deadline-based cohort
+    cuts**: sampling is restricted to clients the availability trace
+    says are awake, each sampled client draws a latency, the round
+    deadline is the cohort's ``deadline_quantile`` latency, and misses
+    either drop (flagged as stragglers) or **spill** — keep training
+    past the deadline and report in the round their upload lands in,
+    with real clock-derived staleness (the FedBuff buffer absorbs them;
+    repro.fed.strategy).
+    """
+
+    def __init__(self, num_clients: int, cfg: FedConfig, seed: int = 0,
+                 clock=None):
+        if clock is not None and (cfg.dropout_rate > 0
+                                  or cfg.straggler_rate > 0):
+            raise ValueError(
+                "the simulated clock REPLACES the coin-flip failure "
+                "model: deadline cuts are the straggler model and "
+                "crash/net faults (FaultConfig) are the dropout model — "
+                "set dropout_rate/straggler_rate to 0 under "
+                "ClockConfig.enabled")
         self.num_clients = num_clients
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
+        self.clock = clock
+        # spilled uploads still in flight: client -> (start_round,
+        # absolute finish time in simulated seconds)
+        self.pending: Dict[int, Tuple[int, float]] = {}
 
-    def plan(self, round_index: int, server_version: int = 0) -> RoundPlan:
+    def plan(self, round_index: int, server_version: int = 0,
+             attempt: int = 0) -> RoundPlan:
+        if self.clock is not None:
+            return self._plan_clocked(round_index, attempt)
         cfg, rng = self.cfg, self.rng
         m = self.max_participants
         sampled = np.sort(rng.choice(self.num_clients, size=m,
@@ -98,7 +147,60 @@ class SyncScheduler:
             staleness=np.zeros(participants.size, dtype=np.int64),
             sampled=sampled,
             dropped=sampled[drop],
-            stragglers=sampled[strag])
+            stragglers=sampled[strag],
+            attempt=attempt)
+
+    def _plan_clocked(self, round_index: int, attempt: int) -> RoundPlan:
+        """Deadline-based cohort cut off the simulated wall-clock."""
+        clock, rng = self.clock, self.rng
+        ccfg = clock.cfg
+        spill = ccfg.deadline_action == "spill"
+        avail = clock.available(round_index, attempt)
+        busy = np.zeros(self.num_clients, dtype=bool)
+        if self.pending:
+            busy[list(self.pending)] = True
+        candidates = np.flatnonzero(avail & ~busy)
+        m = min(self.max_participants, candidates.size)
+        sampled = np.sort(rng.choice(candidates, size=m, replace=False)) \
+            if m else np.array([], dtype=np.int64)
+        lat_all = clock.latencies(round_index, attempt)
+        lat = lat_all[sampled]
+        deadline = clock.deadline(lat)
+        miss = lat > deadline
+        on_time, missed = sampled[~miss], sampled[miss]
+        parts = [on_time]
+        stale = [np.zeros(on_time.size, dtype=np.int64)]
+        lats = [lat[~miss]]
+        if spill:
+            for k in missed:
+                self.pending[int(k)] = (round_index,
+                                        clock.now + float(lat_all[k]))
+            round_end = clock.now + deadline
+            arrived = sorted(k for k, (_, t) in self.pending.items()
+                             if t <= round_end)
+            if arrived:
+                r0 = np.array([self.pending.pop(k)[0] for k in arrived],
+                              dtype=np.int64)
+                arrived = np.array(arrived, dtype=np.int64)
+                parts.append(arrived)
+                stale.append(round_index - r0)
+                lats.append(np.zeros(arrived.size))
+        participants = np.concatenate(parts)
+        staleness = np.concatenate(stale)
+        latency_s = np.concatenate(lats)
+        order = np.argsort(participants, kind="stable")
+        clock.advance(deadline + ccfg.round_gap_s)
+        return RoundPlan(
+            round_index=round_index,
+            participants=participants[order],
+            staleness=staleness[order],
+            sampled=sampled,
+            dropped=np.array([], dtype=np.int64),
+            stragglers=missed,
+            deadline_s=deadline,
+            latency_s=latency_s[order],
+            spilled=missed if spill else None,
+            attempt=attempt)
 
     @property
     def max_participants(self) -> int:
@@ -126,6 +228,12 @@ class SyncScheduler:
     def referenced_versions(self) -> Set[int]:
         return set()                       # sync trains on the current version
 
+    def referenced_rounds(self) -> Set[int]:
+        """Start rounds some spilled upload is still training from — the
+        driver keeps those param snapshots alive until the upload lands
+        (empty without the clock, or under deadline_action='drop')."""
+        return {r0 for r0, _ in self.pending.values()}
+
 
 class FedBuffScheduler:
     """Buffered-async participation: concurrent clients, stale reports."""
@@ -137,7 +245,8 @@ class FedBuffScheduler:
         # client id -> (start_version, is_straggler)
         self.in_flight: Dict[int, Tuple[int, bool]] = {}
 
-    def plan(self, round_index: int, server_version: int = 0) -> RoundPlan:
+    def plan(self, round_index: int, server_version: int = 0,
+             attempt: int = 0) -> RoundPlan:
         cfg, rng = self.cfg, self.rng
         # refill: start idle clients at the current server version
         idle = sorted(set(range(self.num_clients)) - set(self.in_flight))
@@ -193,9 +302,15 @@ class FedBuffScheduler:
         return {v0 for v0, _ in self.in_flight.values()}
 
 
-def make_scheduler(cfg: FedConfig, num_clients: int, seed: int = 0):
+def make_scheduler(cfg: FedConfig, num_clients: int, seed: int = 0,
+                   clock=None):
     if cfg.mode == "sync":
-        return SyncScheduler(num_clients, cfg, seed)
+        return SyncScheduler(num_clients, cfg, seed, clock=clock)
     if cfg.mode == "fedbuff":
+        if clock is not None:
+            raise ValueError(
+                "the simulated clock drives deadline-based sync rounds; "
+                "fedbuff already models asynchrony with its own "
+                "completion process — enable at most one")
         return FedBuffScheduler(num_clients, cfg, seed)
     raise ValueError(f"unknown federation mode {cfg.mode!r}; sync|fedbuff")

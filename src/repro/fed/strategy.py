@@ -19,8 +19,8 @@ engines compose with any aggregation rule.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import Any, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -130,6 +130,9 @@ class ServerState:
     version: int = 0                 # bumps on every applied update
     buffer_sum: Any = None           # fedbuff: Σ weighted decoded deltas
     buffer_count: int = 0            # fedbuff: uploads buffered so far
+    # (client, round) nonces of every payload already accepted past the
+    # dedup gate — a replayed upload hits its nonce and is rejected
+    seen_nonces: Set[Tuple[int, int]] = field(default_factory=set)
 
 
 @dataclass
@@ -140,12 +143,136 @@ class RoundContribution:
     staleness: np.ndarray                      # (P,) server-version lag
     payloads: Optional[List[wire.Payload]] = None   # sparse scbf uploads
     client_params: Optional[List[Any]] = None  # per-client full weights
+    # client ids aligned to the lists above (telemetry on rejection)
+    clients: Optional[np.ndarray] = None
+    # mask-mode SCBFwP ships effective-geometry payloads whose checksums
+    # seal the bytes actually on the wire; the server stores full
+    # geometry, so admission runs on the wire artifacts FIRST and this
+    # callback remaps the admitted survivors to full geometry
+    # (repro.core.pruning.expand_payloads) just before application
+    expand: Optional[Callable[[List[wire.Payload]],
+                              List[wire.Payload]]] = None
+
+
+# ---------------------------------------------------------------------------
+# Server-side admission control
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """What the server refuses to fold into the model.
+
+    Structural validation and checksum verification are always part of
+    the gate; ``max_update_norm`` bounds an admitted update's L2 norm
+    (0 = unbounded) with ``norm_action`` deciding whether an oversized
+    update is rejected outright or scaled down into the bound
+    ("clip").  Rejected updates are excluded from the aggregation
+    denominator entirely — a poisoned cohort shrinks, it does not
+    dilute.
+    """
+
+    max_update_norm: float = 0.0
+    norm_action: str = "reject"
+
+    def __post_init__(self):
+        if self.norm_action not in ("reject", "clip"):
+            raise ValueError(f"unknown norm_action "
+                             f"{self.norm_action!r}; reject|clip")
+        if self.max_update_norm < 0:
+            raise ValueError(f"max_update_norm must be >= 0, got "
+                             f"{self.max_update_norm}")
+
+
+def _payload_finite(p: wire.Payload) -> bool:
+    return all(bool(np.isfinite(np.asarray(lp.values)).all())
+               for lp in p.layers)
+
+
+def _payload_norm(p: wire.Payload) -> float:
+    return float(np.sqrt(sum(
+        float(np.sum(np.square(np.asarray(lp.values), dtype=np.float64)))
+        for lp in p.layers)))
+
+
+def _scale_payload(p: wire.Payload, s: float) -> wire.Payload:
+    layers = tuple(dataclasses.replace(
+        lp, values=(np.asarray(lp.values) * s).astype(lp.values.dtype))
+        for lp in p.layers)
+    return dataclasses.replace(p, layers=layers)
+
+
+def _reject(p: wire.Payload, i: int, contrib: RoundContribution,
+            reason: str) -> None:
+    meta = p.meta
+    client = meta.client_id if meta is not None else (
+        int(contrib.clients[i]) if contrib.clients is not None
+        and i < len(contrib.clients) else None)
+    obstrace.event("payload_rejected", reason=reason, client=client,
+                   round=meta.round_index if meta is not None else None)
+    obstrace.count("payloads_rejected")
+    obstrace.count(f"rejected_{reason}")
+
+
+def admit_payloads(state: ServerState, contrib: RoundContribution,
+                   policy: AdmissionPolicy
+                   ) -> Tuple[List[wire.Payload], List[int]]:
+    """The server's admission gate, in rejection-precedence order:
+    structural validation ("malformed") → checksum ("checksum") →
+    (client, round) nonce dedup ("duplicate") → nonfinite values
+    ("nonfinite") → L2 norm bound ("norm", rejected or clipped into
+    the bound).  Returns the admitted payloads (clipped where
+    applicable) and their indices into ``contrib.payloads``; every
+    rejection emits a ``payload_rejected`` event and bumps counters.
+    """
+    kept: List[wire.Payload] = []
+    kept_idx: List[int] = []
+    for i, p in enumerate(contrib.payloads):
+        try:
+            wire.validate_payload(p)
+        except wire.PayloadError:
+            _reject(p, i, contrib, "malformed")
+            continue
+        if not wire.verify_checksum(p):
+            _reject(p, i, contrib, "checksum")
+            continue
+        if p.meta is not None:
+            nonce = p.meta.nonce
+            if nonce in state.seen_nonces:
+                _reject(p, i, contrib, "duplicate")
+                continue
+            # recorded once the payload passes dedup (even if a later
+            # gate rejects it): a replay of a rejected upload is still
+            # a replay
+            state.seen_nonces.add(nonce)
+        if not _payload_finite(p):
+            _reject(p, i, contrib, "nonfinite")
+            continue
+        if policy.max_update_norm > 0:
+            norm = _payload_norm(p)
+            if norm > policy.max_update_norm:
+                if policy.norm_action == "reject":
+                    _reject(p, i, contrib, "norm")
+                    continue
+                p = _scale_payload(p, policy.max_update_norm / norm)
+                obstrace.count("payloads_clipped")
+        kept.append(p)
+        kept_idx.append(i)
+    return kept, kept_idx
 
 
 class ScbfSum:
-    """The paper's server rule: sum the sparse masked deltas in place."""
+    """The paper's server rule: sum the sparse masked deltas in place.
+
+    With an ``AdmissionPolicy`` attached, payloads pass the admission
+    gate first and only the survivors are applied; a round with no
+    admitted payload leaves the state (and version) untouched.  Without
+    a policy the fault-free hot path is exactly the pre-admission code.
+    """
 
     name = "scbf_sum"
+
+    def __init__(self, policy: Optional[AdmissionPolicy] = None):
+        self.policy = policy
 
     def init(self, params) -> ServerState:
         return ServerState(params=params)
@@ -154,7 +281,14 @@ class ScbfSum:
                   contrib: RoundContribution) -> ServerState:
         if not contrib.payloads:
             return state
-        params = wire.apply_payloads(state.params, contrib.payloads)
+        payloads = contrib.payloads
+        if self.policy is not None:
+            payloads, _ = admit_payloads(state, contrib, self.policy)
+            if not payloads:
+                return state
+        if contrib.expand is not None:
+            payloads = contrib.expand(payloads)
+        params = wire.apply_payloads(state.params, payloads)
         return dataclasses.replace(state, params=params,
                                    version=state.version + 1)
 
@@ -168,6 +302,9 @@ class FedAvg:
 
     name = "fedavg"
 
+    def __init__(self, policy: Optional[AdmissionPolicy] = None):
+        self.policy = policy
+
     def init(self, params) -> ServerState:
         return ServerState(params=params)
 
@@ -175,8 +312,31 @@ class FedAvg:
                   contrib: RoundContribution) -> ServerState:
         if not contrib.client_params:
             return state
+        client_params = contrib.client_params
         n = contrib.num_examples.astype(np.float64)
-        params = server.fedavg_update(contrib.client_params,
+        if self.policy is not None:
+            # dense uploads have no wire payload to checksum; the value
+            # gate still applies — a nonfinite client model must never
+            # enter the mean (and would poison every parameter at once)
+            keep = []
+            for i, cp in enumerate(client_params):
+                finite = all(
+                    bool(np.isfinite(np.asarray(leaf[k])).all())
+                    for leaf in cp for k in leaf)
+                if finite:
+                    keep.append(i)
+                else:
+                    client = int(contrib.clients[i]) \
+                        if contrib.clients is not None else None
+                    obstrace.event("payload_rejected", reason="nonfinite",
+                                   client=client, round=None)
+                    obstrace.count("payloads_rejected")
+                    obstrace.count("rejected_nonfinite")
+            if not keep:
+                return state
+            client_params = [client_params[i] for i in keep]
+            n = n[keep]
+        params = server.fedavg_update(client_params,
                                       weights=n / n.sum())
         return dataclasses.replace(state, params=params,
                                    version=state.version + 1)
@@ -188,12 +348,14 @@ class FedBuff:
     name = "fedbuff"
 
     def __init__(self, buffer_size: int = 10,
-                 staleness_exponent: float = 0.5, server_lr: float = 1.0):
+                 staleness_exponent: float = 0.5, server_lr: float = 1.0,
+                 policy: Optional[AdmissionPolicy] = None):
         if buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
         self.buffer_size = buffer_size
         self.staleness_exponent = staleness_exponent
         self.server_lr = server_lr
+        self.policy = policy
 
     def init(self, params) -> ServerState:
         return ServerState(params=params)
@@ -213,9 +375,28 @@ class FedBuff:
         """
         if not contrib.payloads:
             return state
+        if self.policy is not None:
+            payloads, kept = admit_payloads(state, contrib, self.policy)
+            staleness = np.asarray(contrib.staleness)[kept] \
+                if kept else np.zeros(0, np.int64)
+        else:
+            payloads, staleness = contrib.payloads, contrib.staleness
+            # nonfinite guard, always on: the flush divides the buffer
+            # by its count, so one NaN delta would poison ServerState
+            # forever — reject it before it enters the buffer
+            bad = [i for i, p in enumerate(payloads)
+                   if not _payload_finite(p)]
+            if bad:
+                for i in bad:
+                    _reject(payloads[i], i, contrib, "nonfinite")
+                ok = [i for i in range(len(payloads)) if i not in set(bad)]
+                payloads = [payloads[i] for i in ok]
+                staleness = np.asarray(staleness)[ok]
+        if contrib.expand is not None and payloads:
+            payloads = contrib.expand(payloads)
         params, version = state.params, state.version
         buf, count = state.buffer_sum, state.buffer_count
-        for payload, tau in zip(contrib.payloads, contrib.staleness):
+        for payload, tau in zip(payloads, staleness):
             delta = wire.decode(payload)
             wgt = self.staleness_weight(tau)
             scaled = jax.tree_util.tree_map(
@@ -237,22 +418,33 @@ class FedBuff:
                                    buffer_sum=buf, buffer_count=count)
 
 
-def make_strategy(method: str, scbf_cfg: ScbfConfig, fed_cfg: FedConfig):
-    """Strategy for (method, mode): fedbuff wraps the sparse scbf path."""
-    if fed_cfg.mode == "fedbuff":
+def make_strategy(method: str, scbf_cfg: ScbfConfig, fed_cfg: FedConfig,
+                  policy: Optional[AdmissionPolicy] = None):
+    """Strategy for (method, mode): fedbuff wraps the sparse scbf path.
+
+    Sync scheduling with ``clock.deadline_action='spill'`` also routes
+    through FedBuff: deadline misses keep training and land in later
+    rounds with clock-derived staleness, which is exactly the buffered
+    staleness-weighted aggregation problem.
+    """
+    spill = (fed_cfg.mode == "sync" and fed_cfg.clock.enabled
+             and fed_cfg.clock.deadline_action == "spill")
+    if fed_cfg.mode == "fedbuff" or spill:
         if method != "scbf":
             # FedBuff.aggregate reads only contrib.payloads; fedavg
             # rounds produce client_params, so the server would
             # silently never update
             raise ValueError(
-                f"fedbuff buffers sparse scbf payloads; method={method!r} "
+                ("deadline spilling buffers" if spill
+                 else "fedbuff buffers")
+                + f" sparse scbf payloads; method={method!r} "
                 "produces full client weights the FedBuff strategy would "
                 "silently ignore")
         return FedBuff(buffer_size=fed_cfg.buffer_size,
                        staleness_exponent=fed_cfg.staleness_exponent,
-                       server_lr=fed_cfg.server_lr)
+                       server_lr=fed_cfg.server_lr, policy=policy)
     if method == "scbf":
-        return ScbfSum()
+        return ScbfSum(policy=policy)
     if method == "fedavg":
-        return FedAvg()
+        return FedAvg(policy=policy)
     raise ValueError(f"no strategy for method {method!r}")

@@ -54,16 +54,40 @@ def run_medical(args):
     from repro.data.medical import generate_cohort
     from repro.obs import recording
 
+    from repro.config import ClockConfig
+    from repro.fed.faults import parse_fault_trace
+
     cohort = generate_cohort(seed=args.seed)
     os.makedirs(args.out, exist_ok=True)
     results = {}
-    fed = FedConfig(
+    # --fault-trace / --deadline-quantile arm the chaos model
+    # (docs/FED_ENGINE.md §Fault model & resilience): the fault trace
+    # is seeded, so a chaos run replays bit-identically from its spec
+    faults = parse_fault_trace(args.fault_trace) if getattr(
+        args, "fault_trace", None) else None
+    clock = None
+    if getattr(args, "deadline_quantile", 0.0) > 0:
+        clock = ClockConfig(enabled=True,
+                            deadline_quantile=args.deadline_quantile,
+                            deadline_action=getattr(args, "deadline_action",
+                                                    "drop"))
+    fed_kwargs = dict(
         engine=getattr(args, "engine", "batched"),
         sample_fraction=getattr(args, "sample_fraction", 1.0),
         dropout_rate=getattr(args, "dropout_rate", 0.0),
         straggler_rate=getattr(args, "straggler_rate", 0.0),
         partition=getattr(args, "partition", "iid"),
-        dirichlet_alpha=getattr(args, "dirichlet_alpha", 0.5))
+        dirichlet_alpha=getattr(args, "dirichlet_alpha", 0.5),
+        min_valid_participants=getattr(args, "min_valid_participants", 0),
+        max_update_norm=getattr(args, "max_update_norm", 0.0),
+        norm_action=getattr(args, "norm_action", "reject"))
+    if faults is not None:
+        if "seed=" not in args.fault_trace:  # default the trace seed to --seed
+            faults = dataclasses.replace(faults, seed=args.seed)
+        fed_kwargs["faults"] = faults
+    if clock is not None:
+        fed_kwargs["clock"] = clock
+    fed = FedConfig(**fed_kwargs)
     for method in args.methods.split(","):
         base = method.replace("wp", "")
         prune = method.endswith("wp")
@@ -176,6 +200,29 @@ def main():
     ap.add_argument("--dirichlet-alpha", type=float, default=0.5)
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="DP noise multiplier on scbf uploads (0 = off)")
+    # chaos / resilience (docs/FED_ENGINE.md §Fault model & resilience)
+    ap.add_argument("--fault-trace", default=None,
+                    help="seeded fault-injection spec, comma-separated "
+                         "key=value pairs (e.g. 'crash=0.05,net_fail=0.1,"
+                         "bitflip=0.02,nan=0.01'); keys: seed, crash, "
+                         "net_fail, retries, backoff, duplicate, bitflip, "
+                         "nan, poison, poison_scale")
+    ap.add_argument("--deadline-quantile", type=float, default=0.0,
+                    help="enable the simulated wall clock and cut each "
+                         "cohort at this latency quantile (0 = off)")
+    ap.add_argument("--deadline-action", default="drop",
+                    choices=["drop", "spill"],
+                    help="what happens to deadline misses: drop, or spill "
+                         "into a staleness-weighted buffer")
+    ap.add_argument("--min-valid-participants", type=int, default=0,
+                    help="round quorum: retry with backoff when fewer "
+                         "valid updates arrive (0 = off)")
+    ap.add_argument("--max-update-norm", type=float, default=0.0,
+                    help="server-side L2 norm bound on admitted updates "
+                         "(0 = off)")
+    ap.add_argument("--norm-action", default="reject",
+                    choices=["reject", "clip"],
+                    help="over-norm updates are rejected or clipped")
     ap.add_argument("--events", action="store_true",
                     help="write <out>/<method>.events.jsonl flight-recorder "
                          "logs (repro.obs; view with python -m "

@@ -70,6 +70,35 @@ def _span_summary(events: List[Dict[str, Any]]) -> Dict[str, Dict]:
     return spans
 
 
+def _chaos_summary(events: List[Dict[str, Any]]) -> Optional[Dict]:
+    """Fault-model aggregates, or None on a fault-free stream.
+
+    ``fault_injected`` / ``payload_rejected`` / ``round_retried`` /
+    ``quorum_miss`` are the chaos event kinds (docs/FED_ENGINE.md
+    §Fault model & resilience); additive on EVENT_SCHEMA 1, so
+    fault-free logs summarize exactly as before.
+    """
+    faults: Dict[str, int] = {}
+    rejects: Dict[str, int] = {}
+    retries = quorum_misses = 0
+    for e in events:
+        ev = e.get("ev")
+        if ev == "fault_injected":
+            k = e.get("fault", "?")
+            faults[k] = faults.get(k, 0) + 1
+        elif ev == "payload_rejected":
+            r = e.get("reason", "?")
+            rejects[r] = rejects.get(r, 0) + 1
+        elif ev == "round_retried":
+            retries += 1
+        elif ev == "quorum_miss":
+            quorum_misses += 1
+    if not (faults or rejects or retries or quorum_misses):
+        return None
+    return {"faults_injected": faults, "payloads_rejected": rejects,
+            "rounds_retried": retries, "quorum_misses": quorum_misses}
+
+
 def summarize(events: List[Dict[str, Any]]) -> Dict[str, Any]:
     """Machine-readable run summary (the benches/CI-gate contract).
 
@@ -118,6 +147,7 @@ def summarize(events: List[Dict[str, Any]]) -> Dict[str, Any]:
                      if k in run_end},
         "host_offloads": run_end.get("host_offloads"),
         "spans": _span_summary(events),
+        "chaos": _chaos_summary(events),
     }
 
 
@@ -194,6 +224,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             print("spans: " + "; ".join(
                 f"{k}×{v['count']} {v['total_s']:.3f}s"
                 for k, v in sorted(sp.items())))
+        ch = summary["chaos"]
+        if ch:
+            fi = "; ".join(f"{k}×{v}" for k, v in
+                           sorted(ch["faults_injected"].items()))
+            rj = "; ".join(f"{k}×{v}" for k, v in
+                           sorted(ch["payloads_rejected"].items()))
+            print(f"chaos: injected [{fi or '-'}] rejected [{rj or '-'}] "
+                  f"retries={ch['rounds_retried']} "
+                  f"quorum_misses={ch['quorum_misses']}")
     return 0
 
 

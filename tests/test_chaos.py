@@ -1,0 +1,547 @@
+"""Chaos-hardened federation: faults, admission control, quorum.
+
+The PR-9 acceptance bars, asserted directly:
+
+* zero-injection runs (fault model armed, every rate zero) are
+  bit-identical to the resilience machinery being absent — records,
+  ε spend, and final params;
+* no nonfinite update ever reaches ``ServerState``, even under a 100%
+  NaN storm;
+* corrupted (bitflip/NaN/poison) and duplicated payloads are rejected
+  at the admission gate and counted by reason;
+* quorum-missing rounds retry with backoff and, when exhausted, skip
+  aggregation without bumping the server version;
+* the fused path stays <= 2 compiles with the fault model armed and
+  matches the per-round path bitwise under the same fault trace;
+* the whole fault trace replays deterministically from its seed.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _trace_guards import assert_compiles
+from repro.comm import wire
+from repro.config import (ClockConfig, FaultConfig, FedConfig, ScbfConfig,
+                          TrainConfig)
+from repro.core.scbf import run_federated
+from repro.data.medical import generate_cohort
+from repro.fed.clock import SimClock
+from repro.fed.faults import (CORRUPT_BITFLIP, CORRUPT_NAN, CORRUPT_POISON,
+                              FaultInjector, parse_fault_trace)
+from repro.fed.strategy import (AdmissionPolicy, FedBuff, RoundContribution,
+                                ScbfSum, admit_payloads)
+from repro.obs import Recorder, recording
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return generate_cohort(num_admissions=800, num_medicines=40,
+                           num_risk_medicines=15, num_interactions=4, seed=0)
+
+
+FEATS = (40, 16, 4, 1)
+
+# every fault class at once — the storm used by the chaos CI job
+STORM = FaultConfig(enabled=True, seed=7, crash_rate=0.15,
+                    net_fail_rate=0.15, duplicate_rate=0.2,
+                    bitflip_rate=0.15, nan_rate=0.15, poison_rate=0.15)
+
+
+def _tcfg(fuse: int = 1, loops: int = 4, faults=None, clock=None,
+          max_norm: float = 0.0, **fed_kw):
+    return TrainConfig(
+        learning_rate=0.05, global_loops=loops, local_batch_size=64,
+        local_epochs=1, eval_every=loops,
+        scbf=ScbfConfig(upload_rate=0.1, num_clients=5),
+        fed=FedConfig(fuse_rounds=fuse,
+                      faults=faults if faults is not None else FaultConfig(),
+                      clock=clock if clock is not None else ClockConfig(),
+                      max_update_norm=max_norm, **fed_kw))
+
+
+def _params_equal(a, b):
+    la, lb = (jax.tree_util.tree_leaves(t) for t in (a, b))
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _assert_same_run(a, b, bitwise_params=True):
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert ra.loop == rb.loop
+        assert ra.num_participants == rb.num_participants
+        assert ra.sparse_bytes == rb.sparse_bytes
+        assert ra.dense_bytes == rb.dense_bytes
+        assert ra.epsilon == rb.epsilon
+    if bitwise_params:
+        assert _params_equal(a.final_params, b.final_params)
+
+
+def _finite_params(params):
+    return all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# zero-injection parity: the fault model must cost nothing when idle
+# ---------------------------------------------------------------------------
+
+def test_zero_injection_bit_parity_per_round(cohort):
+    """Armed-with-zero-rates == disarmed, bitwise, on the per-round
+    path: the injector draws, seals, and gates every payload, but the
+    outcome must be the exact run that would have happened anyway."""
+    plain = run_federated(cohort, _tcfg(), method="scbf",
+                          mlp_features=FEATS)
+    armed = run_federated(cohort, _tcfg(faults=FaultConfig(enabled=True)),
+                          method="scbf", mlp_features=FEATS)
+    _assert_same_run(plain, armed)
+
+
+def test_zero_injection_bit_parity_fused(cohort):
+    """Same parity on the fused path, with the run-constant admit mask
+    active — and still <= 2 compiles (the PR-9 acceptance bar)."""
+    plain = run_federated(cohort, _tcfg(fuse=2), method="scbf",
+                          mlp_features=FEATS)
+    with assert_compiles(2):
+        armed = run_federated(cohort,
+                              _tcfg(fuse=2, faults=FaultConfig(enabled=True)),
+                              method="scbf", mlp_features=FEATS)
+    _assert_same_run(plain, armed)
+
+
+def test_zero_injection_parity_with_dp(cohort):
+    """ε accounting is part of the parity contract: the armed run must
+    spend exactly the same privacy budget."""
+    def cfg(faults):
+        c = _tcfg(faults=faults)
+        return dataclasses.replace(
+            c, scbf=dataclasses.replace(c.scbf, dp_noise_multiplier=0.8))
+    a = run_federated(cohort, cfg(FaultConfig()), method="scbf",
+                      mlp_features=FEATS)
+    b = run_federated(cohort, cfg(FaultConfig(enabled=True)),
+                      method="scbf", mlp_features=FEATS)
+    assert a.records[-1].epsilon == b.records[-1].epsilon
+    _assert_same_run(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the admission gate: nothing corrupt may reach ServerState
+# ---------------------------------------------------------------------------
+
+def test_nan_storm_never_reaches_server(cohort):
+    """100% NaN corruption: every payload is rejected, the model never
+    moves, and the final params carry no nonfinite values."""
+    faults = FaultConfig(enabled=True, seed=3, nan_rate=1.0)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(faults=faults), method="scbf",
+                            mlp_features=FEATS)
+    assert _finite_params(res.final_params)
+    rejected = rec.counters.get("rejected_nonfinite", 0)
+    assert rejected == 4 * 5      # every slot of every round
+    # nothing admitted → the server never stepped
+    init = run_federated(cohort, _tcfg(loops=0), method="scbf",
+                         mlp_features=FEATS)
+    assert _params_equal(res.final_params, init.final_params)
+
+
+def test_bitflip_rejected_by_checksum(cohort):
+    """Bit-flipped wire payloads fail CRC verification (or, rarely,
+    structural validation when the flip lands in a length header)."""
+    faults = FaultConfig(enabled=True, seed=5, bitflip_rate=1.0)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(faults=faults), method="scbf",
+                            mlp_features=FEATS)
+    assert _finite_params(res.final_params)
+    n = rec.counters.get("rejected_checksum", 0) \
+        + rec.counters.get("rejected_malformed", 0)
+    assert n == 4 * 5
+    assert rec.counters.get("payloads_rejected") == n
+
+
+def test_duplicates_rejected_and_counted(cohort):
+    """Replayed payloads are dropped by the (client, round) nonce and
+    the originals still land: participation and bytes-shipped move,
+    but each update is applied exactly once."""
+    faults = FaultConfig(enabled=True, seed=11, duplicate_rate=1.0)
+    plain = run_federated(cohort, _tcfg(), method="scbf",
+                          mlp_features=FEATS)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(faults=faults), method="scbf",
+                            mlp_features=FEATS)
+    assert rec.counters.get("rejected_duplicate") == 4 * 5
+    # dedup means the MODEL is the fault-free one, while the byte
+    # accounting honestly reports the replayed traffic
+    assert _params_equal(plain.final_params, res.final_params)
+    for rp, rr in zip(plain.records, res.records):
+        assert rr.sparse_bytes == 2 * rp.sparse_bytes
+
+
+def test_poison_rejected_by_norm_gate(cohort):
+    """Norm-inflated updates exceed max_update_norm and are rejected;
+    without the gate they would be admitted (the refusal matrix makes
+    the gate mandatory for poison on the fused path)."""
+    faults = FaultConfig(enabled=True, seed=13, poison_rate=1.0,
+                         poison_scale=64.0)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(faults=faults, max_norm=10.0),
+                            method="scbf", mlp_features=FEATS)
+    assert rec.counters.get("rejected_norm") == 4 * 5
+    assert _finite_params(res.final_params)
+
+
+def test_norm_clip_scales_instead_of_rejecting(cohort):
+    """norm_action='clip' admits over-norm updates scaled down to the
+    bound (per-round path only — the fused path refuses clip+faults)."""
+    rec = Recorder()
+    with recording(recorder=rec):
+        run_federated(cohort, _tcfg(max_norm=1e-3, norm_action="clip"),
+                      method="scbf", mlp_features=FEATS)
+    assert rec.counters.get("payloads_clipped", 0) > 0
+    assert rec.counters.get("rejected_norm", 0) == 0
+
+
+def test_full_storm_finite_and_counted(cohort):
+    """Every fault class at once: the run completes, the params stay
+    finite, and every injected-and-delivered corruption is rejected."""
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(loops=6, faults=STORM,
+                                          max_norm=100.0),
+                            method="scbf", mlp_features=FEATS)
+    assert _finite_params(res.final_params)
+    injected = sum(1 for e in rec.events if e["ev"] == "fault_injected")
+    assert injected > 0
+    assert rec.counters.get("payloads_rejected", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# fused path under faults
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_per_round_under_storm(cohort):
+    """The same seeded fault trace produces the same run on both paths:
+    faults are drawn per (seed, round, attempt, client) so fuse_rounds
+    cannot shift them, plan-time exclusion contributes exact zeros, and
+    the post-chunk gate re-check guarantees planned == actual."""
+    a = run_federated(cohort, _tcfg(loops=6, faults=STORM, max_norm=100.0),
+                      method="scbf", mlp_features=FEATS)
+    with assert_compiles(2):
+        b = run_federated(cohort, _tcfg(fuse=3, loops=6, faults=STORM,
+                                        max_norm=100.0),
+                          method="scbf", mlp_features=FEATS)
+    _assert_same_run(a, b)
+
+
+def test_fused_refuses_unarmed_norm_gate(cohort):
+    """max_update_norm without the fault model is silently inert on the
+    fused path (aggregation happens on device) — refused loudly."""
+    with pytest.raises(ValueError, match="norm gate"):
+        run_federated(cohort, _tcfg(fuse=2, max_norm=1.0),
+                      method="scbf", mlp_features=FEATS)
+
+
+def test_fused_refuses_clip_under_faults(cohort):
+    """Clipping cannot be applied to on-device deltas at plan time."""
+    faults = FaultConfig(enabled=True, poison_rate=0.5)
+    with pytest.raises(ValueError, match="clip"):
+        run_federated(cohort, _tcfg(fuse=2, faults=faults, max_norm=1.0,
+                                    norm_action="clip"),
+                      method="scbf", mlp_features=FEATS)
+
+
+def test_fused_refuses_poison_without_gate(cohort):
+    """Poisoned updates are only excludable at plan time when the
+    reject-mode norm gate is armed."""
+    faults = FaultConfig(enabled=True, poison_rate=0.5)
+    with pytest.raises(ValueError, match="poison"):
+        run_federated(cohort, _tcfg(fuse=2, faults=faults),
+                      method="scbf", mlp_features=FEATS)
+
+
+# ---------------------------------------------------------------------------
+# quorum and retry
+# ---------------------------------------------------------------------------
+
+def test_quorum_retry_and_miss(cohort):
+    """crash_rate=1 can never satisfy a quorum: each round retries
+    round_retries times with backoff, then records a quorum miss and
+    skips aggregation — the model must not move, but the run completes."""
+    faults = FaultConfig(enabled=True, seed=2, crash_rate=1.0)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(loops=3, faults=faults,
+                                          min_valid_participants=2,
+                                          round_retries=2),
+                            method="scbf", mlp_features=FEATS)
+    assert rec.counters.get("rounds_retried") == 3 * 2
+    assert rec.counters.get("quorum_misses") == 3
+    retries = [e for e in rec.events if e["ev"] == "round_retried"]
+    assert all(e["backoff_s"] > 0 for e in retries)
+    init = run_federated(cohort, _tcfg(loops=0), method="scbf",
+                         mlp_features=FEATS)
+    assert _params_equal(res.final_params, init.final_params)
+
+
+def test_quorum_satisfied_after_retry(cohort):
+    """A quorum that fails on attempt 0 but passes on a retry steps the
+    server exactly once for that round, and the aborted first-attempt
+    cohort still shows up in the ε accounting (their uploads happened)."""
+    # nan_rate high enough that some rounds miss quorum=4 of 5 on the
+    # first draw but clear it on a retry (seeded, so deterministic)
+    faults = FaultConfig(enabled=True, seed=17, nan_rate=0.35)
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(loops=6, faults=faults,
+                                          min_valid_participants=4,
+                                          round_retries=3),
+                            method="scbf", mlp_features=FEATS)
+    retried = rec.counters.get("rounds_retried", 0)
+    assert retried > 0, "seed must produce at least one retry"
+    assert rec.counters.get("quorum_misses", 0) == 0
+    assert _finite_params(res.final_params)
+
+
+def test_quorum_fused_matches_per_round(cohort):
+    """Quorum retries replan with a bumped attempt counter on both
+    paths, so the fused run sees the identical final cohorts."""
+    faults = FaultConfig(enabled=True, seed=17, nan_rate=0.35)
+
+    def run(fuse):
+        return run_federated(cohort, _tcfg(fuse=fuse, loops=6,
+                                           faults=faults,
+                                           min_valid_participants=4,
+                                           round_retries=3),
+                             method="scbf", mlp_features=FEATS)
+    _assert_same_run(run(1), run(3))
+
+
+# ---------------------------------------------------------------------------
+# deterministic replay
+# ---------------------------------------------------------------------------
+
+def test_fault_trace_replays_from_seed(cohort):
+    """Two runs of the same seeded chaos config are the same run —
+    events, counters, bytes, and final bits."""
+    def run():
+        rec = Recorder()
+        with recording(recorder=rec):
+            res = run_federated(cohort, _tcfg(loops=5, faults=STORM,
+                                              max_norm=100.0),
+                                method="scbf", mlp_features=FEATS)
+        return res, rec
+    ra, reca = run()
+    rb, recb = run()
+    _assert_same_run(ra, rb)
+    ka = [(e["ev"], e.get("fault"), e.get("client"), e.get("loop"))
+          for e in reca.events if e["ev"] == "fault_injected"]
+    kb = [(e["ev"], e.get("fault"), e.get("client"), e.get("loop"))
+          for e in recb.events if e["ev"] == "fault_injected"]
+    assert ka == kb
+
+
+def test_injector_outcomes_do_not_depend_on_cohort(cohort):
+    """A client's fate for (round, attempt) is a pure function of the
+    seed and its id — not of who else was sampled."""
+    inj = FaultInjector(8, FaultConfig(enabled=True, seed=9, crash_rate=0.4,
+                                       nan_rate=0.3, duplicate_rate=0.3))
+    full = inj.round_faults(2, np.arange(8))
+    sub = inj.round_faults(2, np.array([1, 5, 6]))
+    for k, j in [(1, 0), (5, 1), (6, 2)]:
+        assert full.crashed[k] == sub.crashed[j]
+        assert full.corrupt[k] == sub.corrupt[j]
+        assert full.duplicated[k] == sub.duplicated[j]
+
+
+# ---------------------------------------------------------------------------
+# simulated clock: deadline cuts and spill
+# ---------------------------------------------------------------------------
+
+def _clock_cfg(action="drop", quantile=0.6):
+    return ClockConfig(enabled=True, deadline_quantile=quantile,
+                       deadline_action=action, hetero_sigma=1.0,
+                       compute_sigma=0.5)
+
+
+def test_deadline_drop_cuts_cohort(cohort):
+    """A sub-1.0 latency quantile must cut somebody, and the telemetry
+    carries the deadline/latency fields for every round."""
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(loops=4,
+                                          clock=_clock_cfg("drop")),
+                            method="scbf", mlp_features=FEATS)
+    rounds = [e for e in rec.events if e["ev"] == "round"]
+    assert all("deadline_s" in e and e["deadline_s"] > 0 for e in rounds)
+    assert any(r.num_participants < 5 for r in res.records)
+    assert _finite_params(res.final_params)
+
+
+def test_deadline_spill_delivers_late_updates(cohort):
+    """Spill mode turns deadline misses into staleness-weighted late
+    arrivals instead of losing them (per-round path only)."""
+    rec = Recorder()
+    with recording(recorder=rec):
+        res = run_federated(cohort, _tcfg(loops=6,
+                                          clock=_clock_cfg("spill")),
+                            method="scbf", mlp_features=FEATS)
+    rounds = [e for e in rec.events if e["ev"] == "round"]
+    assert any(e.get("staleness_mean", 0) > 0 for e in rounds), \
+        "at least one spilled update must arrive late"
+    assert _finite_params(res.final_params)
+
+
+def test_clock_run_is_deterministic(cohort):
+    a = run_federated(cohort, _tcfg(loops=4, clock=_clock_cfg()),
+                      method="scbf", mlp_features=FEATS)
+    b = run_federated(cohort, _tcfg(loops=4, clock=_clock_cfg()),
+                      method="scbf", mlp_features=FEATS)
+    _assert_same_run(a, b)
+
+
+def test_clock_refuses_legacy_coinflips():
+    from repro.fed.scheduler import SyncScheduler
+    clock = SimClock(5, _clock_cfg(), seed=0)
+    with pytest.raises(ValueError, match="clock"):
+        SyncScheduler(5, FedConfig(dropout_rate=0.2), seed=0, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# unit gates: wire integrity (S1) and the admission helper
+# ---------------------------------------------------------------------------
+
+def _tiny_payload():
+    tree = [{"w": np.array([[0.5, 0.0], [0.0, -0.25]], np.float32),
+             "b": np.array([0.1, 0.0], np.float32)}]
+    return wire.encode(tree)
+
+
+def test_seal_and_verify_roundtrip():
+    p = wire.seal(_tiny_payload(), client_id=3, round_index=7)
+    assert p.meta.client_id == 3 and p.meta.round_index == 7
+    assert p.meta.nonce == (3, 7)
+    assert wire.verify_checksum(p)
+    # unsealed payloads (the fault-free path) verify trivially
+    assert wire.verify_checksum(_tiny_payload())
+
+
+def _tamper_value(p, delta=1.0):
+    lp = p.layers[0]
+    vals = np.array(lp.values, np.float32).copy()
+    vals[0] += delta
+    return dataclasses.replace(
+        p, layers=(dataclasses.replace(lp, values=vals),) + p.layers[1:])
+
+
+def test_checksum_detects_tampering():
+    p = wire.seal(_tiny_payload(), client_id=0, round_index=0)
+    assert not wire.verify_checksum(_tamper_value(p))
+
+
+def test_validate_rejects_malformed():
+    p = _tiny_payload()
+    lp = p.layers[0]
+    bad = dataclasses.replace(
+        p, layers=(dataclasses.replace(lp, nnz=lp.size + 1),)
+        + p.layers[1:])
+    with pytest.raises(wire.PayloadError):
+        wire.validate_payload(bad)
+
+
+def test_admit_payloads_reasons():
+    """One call, every verdict: ok, checksum, duplicate, nonfinite,
+    over-norm — kept indices and reasons must line up exactly."""
+    ok = wire.seal(_tiny_payload(), 0, 0)
+    flip = _tamper_value(wire.seal(_tiny_payload(), 1, 0))
+    dup = wire.seal(_tiny_payload(), 0, 0)          # same nonce as ok
+    tree = [{"w": np.array([[np.nan, 0.0], [0.0, 0.0]], np.float32),
+             "b": np.zeros(2, np.float32)}]
+    nonf = wire.seal(wire.encode(tree), 2, 0)
+    big = [{"w": np.full((2, 2), 100.0, np.float32),
+            "b": np.zeros(2, np.float32)}]
+    over = wire.seal(wire.encode(big), 3, 0)
+
+    from repro.fed.strategy import ServerState
+    state = ServerState(params=())
+    rec = Recorder()
+    with recording(recorder=rec):
+        contrib = RoundContribution(
+            num_examples=np.ones(5), staleness=np.zeros(5),
+            payloads=[ok, flip, dup, nonf, over])
+        kept, kept_idx = admit_payloads(
+            state, contrib, AdmissionPolicy(max_update_norm=10.0))
+    assert kept_idx == [0]
+    assert len(kept) == 1 and kept[0] is ok
+    assert rec.counters.get("rejected_checksum") == 1
+    assert rec.counters.get("rejected_duplicate") == 1
+    assert rec.counters.get("rejected_nonfinite") == 1
+    assert rec.counters.get("rejected_norm") == 1
+
+
+def test_fedbuff_always_guards_nonfinite():
+    """S2: FedBuff filters nonfinite uploads even with no admission
+    policy configured — a single NaN would otherwise poison the whole
+    buffered average."""
+    params = [{"w": np.zeros((2, 2), np.float32),
+               "b": np.zeros(2, np.float32)}]
+    good = wire.encode([{"w": np.full((2, 2), 0.5, np.float32),
+                         "b": np.zeros(2, np.float32)}])
+    bad = wire.encode([{"w": np.full((2, 2), np.nan, np.float32),
+                        "b": np.zeros(2, np.float32)}])
+    strat = FedBuff(buffer_size=2, staleness_exponent=0.0)
+    state = strat.init(params)
+    rec = Recorder()
+    with recording(recorder=rec):
+        state = strat.aggregate(state, RoundContribution(
+            num_examples=np.ones(2), staleness=np.zeros(2),
+            payloads=[good, bad]))
+        state = strat.aggregate(state, RoundContribution(
+            num_examples=np.ones(1), staleness=np.zeros(1),
+            payloads=[good]))
+    assert rec.counters.get("rejected_nonfinite") == 1
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for layer in state.params for leaf in layer.values())
+    # buffer flushed on the 2nd good upload: the step landed
+    assert float(np.abs(np.asarray(state.params[0]["w"])).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# the CLI spec parser
+# ---------------------------------------------------------------------------
+
+def test_parse_fault_trace():
+    cfg = parse_fault_trace("seed=4,crash=0.1,net_fail=0.2,retries=5,"
+                            "backoff=2.5,duplicate=0.3,bitflip=0.01,"
+                            "nan=0.02,poison=0.03,poison_scale=8")
+    assert cfg.enabled
+    assert cfg.seed == 4
+    assert cfg.crash_rate == 0.1
+    assert cfg.net_fail_rate == 0.2
+    assert cfg.net_retries == 5
+    assert cfg.net_backoff_s == 2.5
+    assert cfg.duplicate_rate == 0.3
+    assert cfg.bitflip_rate == 0.01
+    assert cfg.nan_rate == 0.02
+    assert cfg.poison_rate == 0.03
+    assert cfg.poison_scale == 8.0
+
+
+def test_parse_fault_trace_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown"):
+        parse_fault_trace("crash=0.1,warp=9")
+    with pytest.raises(ValueError):
+        parse_fault_trace("crash")
+
+
+def test_corruption_rates_must_fit():
+    with pytest.raises(ValueError, match="<= 1"):
+        FaultInjector(4, FaultConfig(enabled=True, bitflip_rate=0.5,
+                                     nan_rate=0.4, poison_rate=0.4))
+    with pytest.raises(ValueError):
+        FaultInjector(4, FaultConfig(enabled=True, crash_rate=1.5))

@@ -1,0 +1,158 @@
+"""Purity properties of the simulated clock and fault injector (S3).
+
+The chaos machinery must be a *pure function of seed + config*: same
+inputs → bit-identical traces, no dependence on call order, cohort
+composition, or how many rounds are fused per chunk.  That is what
+makes a chaos run replayable from its CLI spec and what lets the fused
+driver plan faults for a whole chunk up front.
+
+Hypothesis drives the seed/config space when installed; the suite
+degrades to clean skips without it (tests/_hypothesis_compat), and the
+deterministic spot checks below always run.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.config import ClockConfig, FaultConfig, FedConfig
+from repro.fed.clock import SimClock
+from repro.fed.faults import Resilience, FaultInjector
+from repro.fed.scheduler import make_scheduler
+
+CLOCK = ClockConfig(enabled=True, deadline_quantile=0.8, hetero_sigma=0.8,
+                    diurnal_amplitude=0.3, availability_mean=0.9)
+
+
+# ---------------------------------------------------------------------------
+# always-run determinism spot checks
+# ---------------------------------------------------------------------------
+
+def test_clock_trace_identical_across_instances():
+    a = SimClock(16, CLOCK, seed=5)
+    b = SimClock(16, CLOCK, seed=5)
+    for r in range(6):
+        np.testing.assert_array_equal(a.latencies(r), b.latencies(r))
+        np.testing.assert_array_equal(a.available(r), b.available(r))
+        a.advance(100.0)
+        b.advance(100.0)
+    assert a.now == b.now
+
+
+def test_clock_latencies_are_call_order_free():
+    """latencies(r, attempt) is keyed by (seed, round, attempt) — not
+    by how many draws happened before it."""
+    a = SimClock(8, CLOCK, seed=1)
+    b = SimClock(8, CLOCK, seed=1)
+    fwd = [a.latencies(r) for r in range(5)]
+    rev = [b.latencies(r) for r in reversed(range(5))]
+    for r in range(5):
+        np.testing.assert_array_equal(fwd[r], rev[4 - r])
+
+
+def test_injector_trace_is_call_order_free():
+    cfg = FaultConfig(enabled=True, seed=3, crash_rate=0.2,
+                      net_fail_rate=0.2, duplicate_rate=0.2,
+                      bitflip_rate=0.2, nan_rate=0.2, poison_rate=0.2)
+    part = np.arange(12)
+    a = FaultInjector(12, cfg)
+    b = FaultInjector(12, cfg)
+    fwd = [a.round_faults(r, part) for r in range(5)]
+    rev = [b.round_faults(r, part) for r in reversed(range(5))]
+    for r in range(5):
+        f, g = fwd[r], rev[4 - r]
+        np.testing.assert_array_equal(f.crashed, g.crashed)
+        np.testing.assert_array_equal(f.net_lost, g.net_lost)
+        np.testing.assert_array_equal(f.net_tries, g.net_tries)
+        np.testing.assert_array_equal(f.corrupt, g.corrupt)
+        np.testing.assert_array_equal(f.duplicated, g.duplicated)
+
+
+def test_resilience_plan_sequence_replays():
+    """The full plan_round sequence — cohorts, fault verdicts, retry
+    counts — is identical between two independent stacks, which is
+    exactly why the fused driver may plan a whole chunk ahead."""
+    fed = FedConfig(sample_fraction=0.8,
+                    faults=FaultConfig(enabled=True, seed=9, crash_rate=0.2,
+                                       nan_rate=0.3),
+                    clock=CLOCK, min_valid_participants=2, round_retries=2,
+                    max_update_norm=10.0)
+
+    def stack():
+        clock = SimClock(10, CLOCK, seed=4)
+        sched = make_scheduler(fed, 10, seed=4, clock=clock)
+        inj = FaultInjector(10, fed.faults)
+        return Resilience(sched, clock, inj, fed)
+
+    ra, rb = stack(), stack()
+    for loop in range(8):
+        aa = ra.plan_round(loop, loop)
+        ab = rb.plan_round(loop, loop)
+        np.testing.assert_array_equal(aa.plan.participants,
+                                      ab.plan.participants)
+        np.testing.assert_array_equal(aa.corrupt, ab.corrupt)
+        np.testing.assert_array_equal(aa.will_reject, ab.will_reject)
+        assert aa.quorum_ok == ab.quorum_ok
+        assert aa.attempts == ab.attempts
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the same properties over the seed/config space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 32), st.integers(0, 50),
+       st.integers(0, 3))
+def test_clock_latency_pure_function_of_seed(seed, K, round_index, attempt):
+    a = SimClock(K, CLOCK, seed=seed).latencies(round_index, attempt)
+    b = SimClock(K, CLOCK, seed=seed).latencies(round_index, attempt)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (K,) and (a >= 0).all() and np.isfinite(a).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 32), st.integers(0, 50))
+def test_clock_availability_pure_and_bounded(seed, K, round_index):
+    a = SimClock(K, CLOCK, seed=seed)
+    b = SimClock(K, CLOCK, seed=seed)
+    a.advance(123.0)
+    b.advance(123.0)
+    av_a, av_b = a.available(round_index), b.available(round_index)
+    np.testing.assert_array_equal(av_a, av_b)
+    assert av_a.dtype == bool and av_a.shape == (K,)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 24), st.integers(0, 50),
+       st.floats(0.0, 0.3), st.floats(0.0, 0.3), st.floats(0.0, 0.3),
+       st.data())
+def test_injector_subset_consistent(seed, K, round_index, crash, nan, dup,
+                                    data):
+    """A client's fate is indexed by its id: any sampled sub-cohort
+    observes exactly the slice of the full-cohort trace."""
+    cfg = FaultConfig(enabled=True, seed=seed, crash_rate=crash,
+                      net_fail_rate=0.2, nan_rate=nan, duplicate_rate=dup)
+    inj = FaultInjector(K, cfg)
+    full = inj.round_faults(round_index, np.arange(K))
+    ids = sorted(data.draw(st.sets(st.integers(0, K - 1), min_size=1)))
+    sub = inj.round_faults(round_index, np.array(ids))
+    for j, k in enumerate(ids):
+        assert sub.crashed[j] == full.crashed[k]
+        assert sub.net_lost[j] == full.net_lost[k]
+        assert sub.net_tries[j] == full.net_tries[k]
+        assert sub.net_delay_s[j] == full.net_delay_s[k]
+        assert sub.corrupt[j] == full.corrupt[k]
+        assert sub.duplicated[j] == full.duplicated[k]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 50), st.integers(0, 2))
+def test_injector_attempts_draw_fresh_faults(seed, round_index, attempt):
+    """Retry attempts re-draw the fault trace (attempt is part of the
+    rng key) — otherwise a deterministic crash set could never clear a
+    quorum retry — while the same attempt always replays identically."""
+    cfg = FaultConfig(enabled=True, seed=seed, crash_rate=0.5)
+    inj = FaultInjector(16, cfg)
+    part = np.arange(16)
+    a = inj.round_faults(round_index, part, attempt)
+    b = inj.round_faults(round_index, part, attempt)
+    np.testing.assert_array_equal(a.crashed, b.crashed)

@@ -413,7 +413,7 @@ def test_bench_regression_checker_logic():
     rows are informational — only their presence is required)."""
     chk = _load_checker()
     baseline = {
-        "schema": 2,
+        "schema": 3,
         "k_scaling": [{"K": 5, "speedup": 8.0}, {"K": 500, "speedup": 10.0}],
         "compile_counts": {"pow2": {"compiles": 1},
                            "exact": {"compiles": 7}},
@@ -421,9 +421,11 @@ def test_bench_regression_checker_logic():
                   "telemetry": {"overhead": 0.03}},
         "prune": {"speedup": 2.0, "compiles": 2,
                   "steady": {"time_saving": 0.4}},
+        "chaos": {"overhead": 0.08, "compiles": 1,
+                  "chaos": {"reasons": {"checksum": 8, "nonfinite": 12}}},
     }
     same = {
-        "schema": 2,
+        "schema": 3,
         "k_scaling": [{"K": 5, "speedup": 2.0},    # jitter: not gated
                       {"K": 500, "speedup": 5.0}],  # jitter: not gated
         "compile_counts": {"pow2": {"compiles": 1},
@@ -432,6 +434,8 @@ def test_bench_regression_checker_logic():
                   "telemetry": {"overhead": 0.10}},  # jitter: <= 25% passes
         "prune": {"speedup": 1.8, "compiles": 2,
                   "steady": {"time_saving": 0.1}},   # jitter: sign-gated
+        "chaos": {"overhead": 0.15, "compiles": 1,   # jitter: <= 25% passes
+                  "chaos": {"reasons": {"checksum": 3, "nonfinite": 5}}},
     }
     assert chk.compare(same, baseline) == []
     # schema handshake: a mismatched blob on EITHER side is refused
@@ -452,7 +456,7 @@ def test_bench_regression_checker_logic():
     assert any("compile trace" in m
                for m in chk.compare(fused_retrace, baseline))
     # flight-recorder cost: > 25% overhead fails, a dropped telemetry
-    # section fails (schema 2 always records one)
+    # section fails (schema >= 2 always records one)
     slow_telem = {**same, "fused": {**same["fused"],
                                     "telemetry": {"overhead": 0.40}}}
     assert any("telemetry overhead" in m
@@ -481,6 +485,21 @@ def test_bench_regression_checker_logic():
     no_prune = {k: v for k, v in same.items() if k != "prune"}
     assert any("prune" in m and "missing" in m
                for m in chk.compare(no_prune, baseline))
+    # the chaos section: fault-free resilience tax, armed compile
+    # growth, an admission gate gone inert, and a dropped section all fail
+    chaos_slow = {**same, "chaos": {**same["chaos"], "overhead": 0.40}}
+    assert any("chaos" in m and "overhead" in m
+               for m in chk.compare(chaos_slow, baseline))
+    chaos_retrace = {**same, "chaos": {**same["chaos"], "compiles": 2}}
+    assert any("chaos" in m and "compiles" in m
+               for m in chk.compare(chaos_retrace, baseline))
+    chaos_inert = {**same, "chaos": {**same["chaos"],
+                                     "chaos": {"reasons": {"checksum": 3}}}}
+    assert any("inert" in m and "nonfinite" in m
+               for m in chk.compare(chaos_inert, baseline))
+    no_chaos = {k: v for k, v in same.items() if k != "chaos"}
+    assert any("chaos" in m and "missing" in m
+               for m in chk.compare(no_chaos, baseline))
     # dropping a guarded section must fail, never vacuously pass
     no_counts = {k: v for k, v in same.items() if k != "compile_counts"}
     assert any("compile_counts" in m and "missing" in m
@@ -495,7 +514,7 @@ def test_bench_regression_checker_logic():
                / "baselines" / "fed_engine.json")
     committed = json.loads(bl_path.read_text())
     assert chk.compare(committed, committed) == []
-    assert committed["schema"] == 2
+    assert committed["schema"] == 3
     assert committed["fused"]["speedup"] >= 2.0   # the acceptance bar
     assert committed["fused"]["compile_trace"]["compiles"] <= 2
     # the flight recorder stays cheap (the <5% target lives in
@@ -503,3 +522,9 @@ def test_bench_regression_checker_logic():
     assert committed["fused"]["telemetry"]["overhead"] <= 0.25
     assert committed["prune"]["compiles"] <= 2    # the PR 5 bar
     assert committed["prune"]["steady"]["time_saving"] > 0
+    # the armed-but-idle fault model stays off the hot path, and the
+    # committed storm exercises every admission-gate rejection reason
+    assert committed["chaos"]["overhead"] <= 0.25
+    assert committed["chaos"]["compiles"] <= 2
+    assert set(committed["chaos"]["chaos"]["reasons"]) == {
+        "malformed", "checksum", "duplicate", "nonfinite", "norm"}
