@@ -1,0 +1,17 @@
+# Developer entry points.  `make lint` is byte-for-byte the CI lint
+# job's command (docs/STATIC_ANALYSIS.md §CI): all three static gates
+# — tracelint, privlint, shapelint — in one merged run, pure ast, no
+# JAX needed.
+PY ?= python
+
+.PHONY: lint test test-fast
+
+lint:
+	PYTHONPATH=src $(PY) -m repro.analysis src benchmarks examples \
+	    --json-out lint-report.json
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"

@@ -13,6 +13,7 @@ from repro.analysis.rules import ALL_RULES
 DEFAULT_PATHS = ("src", "benchmarks", "examples")
 DEFAULT_BASELINE = "analysis/baseline.json"
 DEFAULT_PRIVACY_BASELINE = "analysis/privacy_baseline.json"
+DEFAULT_SHAPE_BASELINE = "analysis/shape_baseline.json"
 
 # package roots stripped when deriving dotted module names
 SOURCE_ROOTS = ("src",)

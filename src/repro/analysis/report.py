@@ -13,9 +13,9 @@ directly above silences the finding at the source; for a finding inside
 a decorated ``def``'s header (any decorator line through the ``def``
 line) the comment may sit anywhere in that header or on the line above
 it.  The baseline instead *records* a finding that stays visible in
-``--list-baseline`` with a justification.  Both linters (tracelint and
-privlint) share these semantics — the rule-code filter is what scopes a
-comment to one tool.
+``--list-baseline`` with a justification.  All three linters
+(tracelint, privlint, and shapelint) share these semantics — the
+rule-code filter is what scopes a comment to one tool.
 """
 from __future__ import annotations
 
@@ -28,7 +28,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 _SUPPRESS_RE = re.compile(
-    r"#\s*(?:tracelint|privlint):\s*disable(?:=(?P<codes>[A-Z0-9,\s]+))?")
+    r"#\s*(?:tracelint|privlint|shapelint):"
+    r"\s*disable(?:=(?P<codes>[A-Z0-9,\s]+))?")
 
 BASELINE_VERSION = 1
 

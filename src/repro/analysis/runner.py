@@ -1,15 +1,17 @@
-"""Merged analysis runner — both linters, one report, one exit code.
+"""Merged analysis runner — all three linters, one report, one exit code.
 
-    PYTHONPATH=src python -m repro.analysis                # both linters
+    PYTHONPATH=src python -m repro.analysis                # all linters
     PYTHONPATH=src python -m repro.analysis --trace        # tracelint only
     PYTHONPATH=src python -m repro.analysis --privacy      # privlint only
+    PYTHONPATH=src python -m repro.analysis --shape        # shapelint only
     PYTHONPATH=src python -m repro.analysis --privacy --json-out  # stdout
     PYTHONPATH=src python -m repro.analysis --json-out report.json
 
 Each tool keeps its own committed baseline (tracelint →
 ``analysis/baseline.json``, privlint →
-``analysis/privacy_baseline.json``) and its own suppression comment
-prefix; the runner merges their reports and exits 1 when EITHER tool
+``analysis/privacy_baseline.json``, shapelint →
+``analysis/shape_baseline.json``) and its own suppression comment
+prefix; the runner merges their reports and exits 1 when ANY tool
 has new findings — this is the single entry point the CI lint job
 calls.  Pure ``ast`` end to end: no JAX, no imports of scanned code.
 """
@@ -20,14 +22,16 @@ import json
 import sys
 from typing import List, Optional, Sequence
 
-from repro.analysis import privlint, tracelint
+from repro.analysis import privlint, shapelint, tracelint
 from repro.analysis.config import (DEFAULT_BASELINE, DEFAULT_PATHS,
-                                   DEFAULT_PRIVACY_BASELINE)
+                                   DEFAULT_PRIVACY_BASELINE,
+                                   DEFAULT_SHAPE_BASELINE)
 from repro.analysis.report import (Baseline, json_report, render_report)
 
 _TOOLS = {
     "tracelint": (tracelint.run_paths, DEFAULT_BASELINE),
     "privlint": (privlint.run_paths, DEFAULT_PRIVACY_BASELINE),
+    "shapelint": (shapelint.run_paths, DEFAULT_SHAPE_BASELINE),
 }
 
 
@@ -35,7 +39,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.analysis",
         description="run the repo's static analyses (tracelint + "
-                    "privlint) with one merged report")
+                    "privlint + shapelint) with one merged report")
     ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
                     help=f"files/directories to lint "
                          f"(default: {' '.join(DEFAULT_PATHS)})")
@@ -43,6 +47,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="run tracelint (TL rules) only")
     ap.add_argument("--privacy", action="store_true",
                     help="run privlint (PL rules) only")
+    ap.add_argument("--shape", action="store_true",
+                    help="run shapelint (SL rules) only")
     ap.add_argument("--trace-baseline", default=DEFAULT_BASELINE,
                     help=f"tracelint baseline "
                          f"(default: {DEFAULT_BASELINE}; '' for none)")
@@ -50,6 +56,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     default=DEFAULT_PRIVACY_BASELINE,
                     help=f"privlint baseline (default: "
                          f"{DEFAULT_PRIVACY_BASELINE}; '' for none)")
+    ap.add_argument("--shape-baseline",
+                    default=DEFAULT_SHAPE_BASELINE,
+                    help=f"shapelint baseline (default: "
+                         f"{DEFAULT_SHAPE_BASELINE}; '' for none)")
     ap.add_argument("--json-out", nargs="?", const="-", default=None,
                     metavar="FILE",
                     help="write the merged machine-readable report to "
@@ -57,10 +67,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     selected = [name for name, flag in
-                (("tracelint", args.trace), ("privlint", args.privacy))
+                (("tracelint", args.trace), ("privlint", args.privacy),
+                 ("shapelint", args.shape))
                 if flag] or list(_TOOLS)
     baselines = {"tracelint": args.trace_baseline or None,
-                 "privlint": args.privacy_baseline or None}
+                 "privlint": args.privacy_baseline or None,
+                 "shapelint": args.shape_baseline or None}
 
     merged = {"version": 1, "tools": {}}
     reports: List[str] = []

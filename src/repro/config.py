@@ -403,6 +403,11 @@ class TrainConfig:
     local_batch_size: int = 256
     seed: int = 0
     remat: bool = True
+    # debug runs: finite/validity assertions on params and round
+    # metrics at chunk boundaries (the SL006-class dynamic net).
+    # Host-side checks on already-offloaded values, so the traced
+    # program is byte-identical with the flag on or off.
+    debug_checks: bool = False
     scbf: ScbfConfig = field(default_factory=ScbfConfig)
     fed: FedConfig = field(default_factory=FedConfig)
     obs: ObsConfig = field(default_factory=ObsConfig)

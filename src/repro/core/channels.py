@@ -101,7 +101,7 @@ def masked_quantile(values: jnp.ndarray, q: float) -> jnp.ndarray:
     """
     vals = jnp.sort(values)
     n = vals.shape[0]
-    n_valid = jnp.sum(jnp.isfinite(vals))
+    n_valid = jnp.sum(jnp.isfinite(vals).astype(jnp.int32))
     pos = (n - n_valid) + q * jnp.maximum(n_valid - 1, 0)
     lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
     hi = jnp.clip(jnp.ceil(pos).astype(jnp.int32), 0, n - 1)
@@ -275,7 +275,7 @@ def apply_factored_mask(grads, upload_rate: float,
                       0.0).astype(leaf.dtype)
         masked.append(m)
         per_chan = leaf.size // s.shape[0]
-        kept += jnp.sum(keep) * per_chan
+        kept += jnp.sum(keep.astype(jnp.int32)) * per_chan
         total += leaf.size
     frac = kept / total
     return jax.tree_util.tree_unflatten(treedef, masked), frac

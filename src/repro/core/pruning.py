@@ -151,7 +151,8 @@ def update_keep_masks(apoz: Sequence[np.ndarray],
     """
     keep = [np.asarray(m, bool).copy() for m in keep_masks]
     original_hidden = sum(m.shape[0] for m in keep)
-    already = original_hidden - sum(int(m.sum()) for m in keep)
+    already = original_hidden - sum(int(np.count_nonzero(m))
+                                    for m in keep)
     budget = _step_budget(prune_rate, already, original_hidden, prune_total)
     return _greedy_remove(apoz, keep, budget)
 

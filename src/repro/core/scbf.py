@@ -51,6 +51,7 @@ from repro.core import privacy, pruning
 from repro.data.medical import MedicalCohort, dirichlet_split, federated_split
 from repro.metrics.auc import auc_pr, auc_roc
 from repro.models.mlp_net import init_mlp, mlp_forward
+from repro.obs import checks as obschecks
 from repro.obs import metrics as obsm
 from repro.obs import trace as obstrace
 from repro.optim import schedules
@@ -681,6 +682,10 @@ def run_federated(cohort: MedicalCohort,
             epsilon=eps, evaluated=evaluated, epsilon_unamplified=eps_un,
             train_loss=dm.get("train_loss") if dm else None)
         result.records.append(rec)
+        if train_cfg.debug_checks:
+            # host-side chunk-boundary assertions on already-offloaded
+            # values; the traced program is identical either way
+            obschecks.verify_round(params, dm, where=f"loop {loop}")
         obstrace.event("round", **_round_event_fields(
             rec, plan, pruner, dm, eps_step=(eps - prev_eps)
             if eps is not None else None))
@@ -878,6 +883,10 @@ def _run_fused(cohort: MedicalCohort, train_cfg: TrainConfig, method: str,
                           if ar.quorum_ok and bool(ar.admit_mask().any()))
             state = dataclasses.replace(state, params=new_params,
                                         version=state.version + applied)
+            if train_cfg.debug_checks:
+                # host-side, on the values the chunk already offloaded
+                obschecks.verify_round(state.params, round_metrics,
+                                       where=f"chunk@loop {loop0}")
             if prune_active:
                 # chunk boundary == per-round cadence while pruning
                 # (chunks are 1 round long): APoZ on device, mask update

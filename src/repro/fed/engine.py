@@ -299,7 +299,7 @@ def _fused_fedavg_rounds(params, x_all, y_all, w_all, part_idx, weights,
             met = obsm.FedAvgMetrics(
                 loss_sum=jnp.sum(jnp.where(valid, losses, 0.0)
                                  ).astype(jnp.float32),
-                participants=jnp.sum(valid).astype(jnp.int32))
+                participants=jnp.sum(valid.astype(jnp.int32)))
         else:
             new_stack, met = out, None
         return fedavg_step(p, new_stack, wts), met
@@ -673,7 +673,7 @@ class BatchedEngine:
                 else ([], self.counts[:0])
         xs, ys, ws = self._gather(participants)
         p = tuple(params)
-        _, (xs, ys, ws), (ck,), _, _ = self._bucketed_inputs(
+        _, (xs, ys, ws), (ck,), _, valid = self._bucketed_inputs(
             participants, (xs, ys, ws),
             key_arrays=(jnp.stack(list(ckeys)),))
         if self.mesh is not None:
@@ -686,9 +686,16 @@ class BatchedEngine:
                                spmd_axis=self.spmd_axis, collect=collect)
         if collect:
             new_p, losses = out
+            # same validity-masked accounting as the fused path's
+            # round_body: padded tail slots (real losses, trained on
+            # slot 0's shard under distinct filler keys) are excluded
+            # by mask rather than by slicing — bit-identical to the
+            # old sliced sum, since adding the masked zeros cannot
+            # move an f32 sum of finite values
             met = obsm.FedAvgMetrics(
-                loss_sum=jnp.sum(losses[:p_count]).astype(jnp.float32),
-                participants=jnp.int32(p_count))
+                loss_sum=jnp.sum(jnp.where(valid, losses, 0.0)
+                                 ).astype(jnp.float32),
+                participants=jnp.sum(valid.astype(jnp.int32)))
             dm = obsm.offload(met)
         else:
             new_p = out

@@ -70,7 +70,7 @@ def _zero_fraction(act: jnp.ndarray) -> jnp.ndarray:
     b, n = act.shape
     if b % DEFAULT_BB == 0 and n % DEFAULT_BN == 0:
         return apoz_counts_pallas(act).astype(jnp.float32) / b
-    return jnp.mean(act == 0.0, axis=0)
+    return jnp.mean((act == 0.0).astype(jnp.float32), axis=0)
 
 
 @jax.jit

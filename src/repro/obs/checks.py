@@ -1,0 +1,115 @@
+"""Runtime finite/validity checks for debug runs (``debug_checks``).
+
+The static gate (shapelint, ``docs/STATIC_ANALYSIS.md`` §Shape lint)
+holds the padding/mask discipline at review time; this module is its
+*dynamic* counterpart for the escapes static analysis cannot see —
+an SL006-class nonfinite (inf/nan from an all-masked round, an
+unguarded denominator through an opaque call) or a validity-mask
+bug that corrupts the aggregated parameters.
+
+Design: the checks run **host-side at chunk boundaries**, on values
+the training loop has already offloaded (parameters after a chunk of
+fused rounds, the per-round metric records).  Nothing is inserted
+into the traced program — with ``TrainConfig.debug_checks`` on or
+off, the jitted computation is byte-identical, which is what makes
+the parity contract trivial to test and keeps the checks off the
+hot path (one extra ``device_get`` per chunk, not per round).
+
+``verify_round`` raises :class:`DebugCheckError` with the offending
+leaf path, the breakdown (nan/inf count), and the boundary label, so
+a poisoned run fails at the *first* corrupted chunk instead of
+surfacing as a quietly wrong AUC at the end.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import jax
+import numpy as np
+
+
+class DebugCheckError(AssertionError):
+    """A finite/validity assertion failed at a chunk boundary."""
+
+
+def _leaf_label(path) -> str:
+    out = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is None:
+            key = getattr(p, "idx", None)
+        if key is None:
+            key = getattr(p, "name", None)
+        out.append(str(key) if key is not None else str(p))
+    return "/".join(out) or "<root>"
+
+
+def _check_leaf(label: str, leaf: Any, where: str) -> None:
+    arr = np.asarray(jax.device_get(leaf))
+    if not np.issubdtype(arr.dtype, np.floating):
+        return
+    finite = np.isfinite(arr)
+    if finite.all():
+        return
+    bad = arr[~finite]
+    n_nan = int(np.count_nonzero(np.isnan(bad)))
+    n_inf = bad.size - n_nan
+    raise DebugCheckError(
+        f"debug_checks: non-finite values at {where}: leaf '{label}' "
+        f"has {n_nan} nan / {n_inf} inf of {arr.size} elements "
+        f"(dtype {arr.dtype}) — an SL006-class escape; check masked "
+        "denominators and guards on the aggregation path")
+
+
+def check_finite(tree: Any, *, where: str) -> None:
+    """Assert every floating leaf of ``tree`` is finite."""
+    if tree is None:
+        return
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        _check_leaf(_leaf_label(path), leaf, where)
+
+
+def check_participants(count: Any, p_count: Optional[int], *,
+                       where: str) -> None:
+    """Assert the masked participant tally matches the live count.
+
+    ``Σvalid`` disagreeing with ``p_count`` means a validity mask was
+    widened or narrowed somewhere between padding and aggregation —
+    the exact bug class SL001/SL002 guard statically.
+    """
+    if count is None or p_count is None:
+        return
+    got = int(np.asarray(jax.device_get(count)))
+    if got != int(p_count):
+        raise DebugCheckError(
+            f"debug_checks: participant accounting skew at {where}: "
+            f"Σvalid = {got} but the cohort has {p_count} live "
+            "slot(s) — a validity mask was corrupted between padding "
+            "and aggregation")
+
+
+def verify_round(params: Any, metrics: Any = None, *,
+                 where: str,
+                 p_count: Optional[int] = None,
+                 participants: Any = None) -> None:
+    """One chunk-boundary verification: params + metrics finite, and
+    (when both are known) the participant tally consistent."""
+    check_finite(params, where=f"{where} [params]")
+    if metrics is not None:
+        check_finite(metrics, where=f"{where} [metrics]")
+    check_participants(participants, p_count, where=where)
+
+
+def verify_records(records: Iterable[Any], *, where: str) -> None:
+    """Check the floating fields of host-side loop records."""
+    for i, rec in enumerate(records):
+        for name in ("loss", "auc_roc", "auc_pr", "train_loss"):
+            v = getattr(rec, name, None)
+            if v is None:
+                continue
+            f = float(v)
+            if f != f or f in (float("inf"), float("-inf")):
+                raise DebugCheckError(
+                    f"debug_checks: non-finite record field "
+                    f"'{name}'={f} at {where} (record {i})")

@@ -109,13 +109,13 @@ def slot_metrics(loss, masked, masks, v, eff_sizes=None) -> MetricsCarry:
     for layer in masks:
         b = layer.get("b")
         if b is not None:
-            sel.append(jnp.sum(b).astype(jnp.int32))
+            sel.append(jnp.sum(b.astype(jnp.int32)))
         else:
             # bias-free layer: a channel is selected iff any of its
             # edges is (the mask column is all-true or all-false only
             # for the input layer, so reduce with any, not all)
-            sel.append(jnp.sum(jnp.any(layer["w"], axis=0))
-                       .astype(jnp.int32))
+            sel.append(jnp.sum(jnp.any(layer["w"], axis=0)
+                               .astype(jnp.int32)))
     return MetricsCarry(
         loss_sum=jnp.where(v, loss, 0.0).astype(jnp.float32),
         participants=v.astype(jnp.int32),

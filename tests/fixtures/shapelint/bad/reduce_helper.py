@@ -1,0 +1,8 @@
+"""Helper module for the interprocedural fixture: ``total`` is CLEAN
+in isolation (summing an arbitrary array is fine) — it only becomes an
+SL001 once a caller in another module feeds it a padded array."""
+import jax.numpy as jnp
+
+
+def total(xs):
+    return jnp.sum(xs)

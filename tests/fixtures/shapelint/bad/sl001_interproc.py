@@ -1,0 +1,17 @@
+"""BAD (SL001, interprocedural): the padded array is reduced by a
+helper in ANOTHER module; the finding must land inside
+``reduce_helper.total`` — padding provenance crossed the module
+boundary via the call-site → parameter propagation."""
+import jax.numpy as jnp
+
+from bad.reduce_helper import total
+
+
+def _pad_slots(x, b):
+    """Producer stub with the PR 3 padder's name and contract."""
+    return x
+
+
+def loss_via_helper(losses, b):
+    padded = _pad_slots(losses, b)
+    return total(padded)

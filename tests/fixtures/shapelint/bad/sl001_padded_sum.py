@@ -1,0 +1,16 @@
+"""BAD (SL001): the verbatim PR 3 bucketed-padding shape — a cohort of
+``p_count`` losses is repeat-padded up to the bucket capacity ``b``,
+then reduced WITHOUT a validity mask.  The tail slots hold copies of
+slot 0, so the sum double-counts slot 0 ``b - p_count`` times."""
+import jax.numpy as jnp
+
+
+def _pad_slots(x, b):
+    """Repeat-fill the tail slots with slot 0 (the PR 3 idiom)."""
+    pad = jnp.tile(x[:1], (b - x.shape[0],))
+    return jnp.concatenate([x, pad])
+
+
+def round_loss_sum(losses, b):
+    padded = _pad_slots(losses, b)
+    return jnp.sum(padded)              # SL001: no mask, no slice

@@ -1,0 +1,24 @@
+"""BAD (SL002): the "mean over B instead of Σvalid" bug, in both of
+its shapes, against the verbatim PR 9 admit-mask layout — the numerator
+is correctly validity-masked, but the denominator counts every bucket
+slot including the dead ones."""
+import jax.numpy as jnp
+
+
+def bucket_size(p_count, num_clients):
+    """Bucket capacity ≥ p_count (the PR 3 producer shape)."""
+    b = 1
+    while b < p_count:
+        b *= 2
+    return min(b, num_clients)
+
+
+def mean_over_bucket(losses, admit):
+    masked = jnp.where(admit, losses, 0.0)
+    return jnp.mean(masked)             # SL002: divides by B, not Σadmit
+
+
+def sum_over_capacity(losses, admit, p_count, num_clients):
+    b = bucket_size(p_count, num_clients)
+    masked_sum = jnp.sum(jnp.where(admit, losses, 0.0))
+    return masked_sum / b               # SL002: b counts dead slots

@@ -1,0 +1,13 @@
+"""BAD (SL003): float64 drift inside jit-reachable code — an f64
+scalar minted with ``np.float64`` and an ``astype(float)`` (numpy:
+float64) both silently change the compute dtype under jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def drifting_step(params, grads):
+    scale = np.float64(0.5)             # SL003: f64 creation in trace
+    wide = grads.astype(float)          # SL003: astype(float) is f64
+    return params - scale * wide

@@ -1,0 +1,15 @@
+"""BAD (SL005): a rank-2 padded slot table broadcasts against a rank-1
+clean per-channel array — every channel column inherits the dead slots
+silently, and nothing downstream knows the result is padded."""
+import jax.numpy as jnp
+
+
+def _pad_slots(x, b):
+    """Producer stub with the PR 3 padder's name and contract."""
+    return x
+
+
+def widen_padding(b, k):
+    padded = _pad_slots(jnp.zeros((b, k)), b)   # (B, K), B has dead slots
+    channel_scale = jnp.ones((k,))              # (K,), clean
+    return padded * channel_scale               # SL005: rank 2 vs rank 1

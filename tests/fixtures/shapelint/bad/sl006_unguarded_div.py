@@ -1,0 +1,15 @@
+"""BAD (SL006): dividing by (and taking the log of) Σvalid with no
+positive guard — the all-slots-masked round (quorum miss, total fault
+injection) makes the denominator 0 and poisons the aggregate with
+inf/nan."""
+import jax.numpy as jnp
+
+
+def unguarded_mean(loss_sum, valid):
+    n = jnp.sum(valid.astype(jnp.float32))
+    return loss_sum / n                 # SL006: n == 0 when all masked
+
+
+def unguarded_log(valid):
+    n = jnp.sum(valid.astype(jnp.float32))
+    return jnp.log(n)                   # SL006: log(0) = -inf

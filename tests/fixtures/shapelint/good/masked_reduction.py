@@ -1,0 +1,38 @@
+"""GOOD: every sanctioned padding-discipline idiom the repo uses —
+validity-masked sums with guarded Σvalid denominators, slicing back to
+the live prefix, explicit mask casts, and the masked-quantile pattern.
+Zero findings."""
+import jax.numpy as jnp
+
+
+def _pad_slots(x, b):
+    """Producer stub with the PR 3 padder's name and contract."""
+    return x
+
+
+def masked_mean(losses, valid, b):
+    padded = _pad_slots(losses, b)
+    # the canonical fused-path accounting: masked sum over Σvalid,
+    # with a positive guard for the all-masked round
+    loss_sum = jnp.sum(jnp.where(valid, padded, 0.0))
+    n = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    return loss_sum / n
+
+
+def sliced_sum(losses, b, p_count):
+    padded = _pad_slots(losses, b)
+    # the sequential-path idiom: slice back to the live prefix
+    return jnp.sum(padded[:p_count])
+
+
+def cast_tally(valid):
+    # explicit cast before arithmetic on a boolean mask
+    return jnp.sum(valid.astype(jnp.int32))
+
+
+def masked_weighting(per, weights):
+    # float weights are exact zeros at dead slots: multiplication
+    # clears the padding, the guard clears the zero denominator
+    num = jnp.sum(per * weights)
+    den = jnp.maximum(jnp.sum(weights), 1.0)
+    return num / den

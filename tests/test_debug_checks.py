@@ -1,0 +1,154 @@
+"""``TrainConfig.debug_checks``: host-side finite/validity assertions
+at chunk boundaries (repro.obs.checks) — the dynamic counterpart of the
+shapelint static gate (docs/STATIC_ANALYSIS.md §Shape lint).
+
+Contract under test: the checks run on values the loop has already
+offloaded, so the traced program is byte-identical with the flag on or
+off (bitwise record parity); a poisoned tree fails loudly with the
+offending leaf path; and the unified sequential-path loss accounting
+(satellite 6) is bit-identical to the sliced form it replaced.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.fed.engine as engine_mod
+from repro.config import FedConfig, ScbfConfig, TrainConfig
+from repro.core.scbf import run_federated
+from repro.data.medical import generate_cohort
+from repro.fed.cohort import bucket_size
+from repro.fed.engine import make_engine
+from repro.models.mlp_net import init_mlp
+from repro.obs import checks
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return generate_cohort(num_admissions=120, num_medicines=10,
+                           num_risk_medicines=4, num_interactions=2, seed=0)
+
+
+FEATS = (10, 6, 1)
+
+
+def _tcfg(**kw):
+    return TrainConfig(learning_rate=0.05, global_loops=2,
+                       local_batch_size=32, local_epochs=1,
+                       scbf=ScbfConfig(upload_rate=0.25, num_clients=3),
+                       **kw)
+
+
+# ---------------------------------------------------------------------------
+# unit contracts: repro.obs.checks
+# ---------------------------------------------------------------------------
+
+def test_check_finite_passes_and_names_the_bad_leaf():
+    good = ({"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))},)
+    checks.check_finite(good, where="unit")        # no raise
+
+    bad = ({"w": jnp.ones((3, 2)).at[1, 0].set(jnp.nan),
+            "b": jnp.zeros((2,))},)
+    with pytest.raises(checks.DebugCheckError) as exc:
+        checks.check_finite(bad, where="loop 3")
+    msg = str(exc.value)
+    assert "loop 3" in msg and "'0/w'" in msg and "1 nan" in msg
+
+    inf = ({"w": jnp.full((2,), jnp.inf)},)
+    with pytest.raises(checks.DebugCheckError, match="2 inf"):
+        checks.check_finite(inf, where="unit")
+
+    # integer leaves are exempt (finiteness is a float property)
+    checks.check_finite((jnp.arange(4),), where="unit")
+    checks.check_finite(None, where="unit")        # vacuous
+
+
+def test_check_participants_detects_mask_skew():
+    checks.check_participants(jnp.asarray(3), 3, where="unit")
+    checks.check_participants(None, 3, where="unit")     # unknown: skip
+    checks.check_participants(jnp.asarray(3), None, where="unit")
+    with pytest.raises(checks.DebugCheckError, match="skew"):
+        checks.check_participants(jnp.asarray(4), 3, where="chunk@loop 0")
+
+
+def test_verify_records_rejects_nonfinite_fields():
+    @dataclasses.dataclass
+    class Rec:
+        loss: float
+        auc_roc: float
+
+    checks.verify_records([Rec(0.5, 0.9)], where="unit")
+    with pytest.raises(checks.DebugCheckError, match="auc_roc"):
+        checks.verify_records([Rec(0.5, float("nan"))], where="unit")
+
+
+# ---------------------------------------------------------------------------
+# the parity contract: debug_checks must not perturb the run
+# ---------------------------------------------------------------------------
+
+def test_debug_checks_bitwise_parity_per_round(cohort):
+    base = run_federated(cohort, _tcfg(), method="scbf",
+                         mlp_features=FEATS)
+    checked = run_federated(cohort, _tcfg(debug_checks=True),
+                            method="scbf", mlp_features=FEATS)
+    assert len(base.records) == len(checked.records)
+    for a, b in zip(base.records, checked.records):
+        assert a.auc_roc == b.auc_roc        # bitwise: same trace either way
+        assert a.auc_pr == b.auc_pr
+        assert a.sparse_bytes == b.sparse_bytes
+
+
+def test_debug_checks_bitwise_parity_fused(cohort):
+    fed = FedConfig(fuse_rounds=2)
+    base = run_federated(cohort, _tcfg(fed=fed), method="scbf",
+                         mlp_features=FEATS)
+    checked = run_federated(cohort, _tcfg(fed=fed, debug_checks=True),
+                            method="scbf", mlp_features=FEATS)
+    for a, b in zip(base.records, checked.records):
+        assert a.auc_roc == b.auc_roc
+        assert a.auc_pr == b.auc_pr
+
+
+# ---------------------------------------------------------------------------
+# satellite 6: unified loss accounting, bit parity with the sliced form
+# ---------------------------------------------------------------------------
+
+def test_fedavg_masked_loss_sum_bit_matches_sliced(monkeypatch):
+    """fedavg_round now computes ``Σ where(valid, losses, 0)`` like the
+    fused round_body; on a padded bucket (P=3 → bucket 4) this must be
+    bit-identical to the ``Σ losses[:p_count]`` form it replaced — the
+    dead slot is excluded by mask or by slice either way, and adding
+    its masked zero cannot move an f32 sum of finite positives."""
+    rng = np.random.default_rng(0)
+    clients = [(rng.random((24, 12)).astype(np.float32),
+                (rng.random(24) < 0.5).astype(np.float32))
+               for _ in range(5)]
+    eng = make_engine("batched", clients, 8, 1, bucket="pow2")
+    params = init_mlp((12, 8, 1), jax.random.PRNGKey(1))
+    part = np.array([0, 2, 4])
+    assert bucket_size(3, 5) == 4            # the bucket actually pads
+    ck = jax.random.split(jax.random.PRNGKey(0), 3)
+
+    captured = {}
+    orig = engine_mod._fedavg_pass
+
+    def spy(*args, **kw):
+        out = orig(*args, **kw)
+        captured["losses"] = out[1]
+        return out
+
+    monkeypatch.setattr(engine_mod, "_fedavg_pass", spy)
+    _, _, dm = eng.fedavg_round(params, part, 0.1, ck, collect=True)
+
+    losses = captured["losses"]
+    assert losses.shape == (4,)              # padded to the bucket
+    sliced = float(jnp.sum(losses[:3]).astype(jnp.float32))
+    assert dm["train_loss"] == sliced / 3    # bitwise, not allclose
+    # the padded slot carries a REAL (nonzero, distinct-key) loss the
+    # accounting must exclude — if the mask ever widened, the sums
+    # above could not match
+    pad_loss = float(losses[3])
+    assert np.isfinite(pad_loss) and pad_loss != 0.0
+    assert pad_loss not in {float(losses[i]) for i in range(3)}

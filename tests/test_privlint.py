@@ -199,19 +199,20 @@ def test_cli_gate_fails_on_injected_pl001(tmp_path):
 
 
 def test_merged_runner_reports_both_tools(tmp_path):
-    """``python -m repro.analysis`` runs tracelint AND privlint with one
-    merged report/exit code; --privacy scopes it to the PL rules."""
+    """``python -m repro.analysis`` runs every linter with one merged
+    report/exit code; --privacy scopes it to the PL rules."""
     tree = tmp_path / "pkg"
     tree.mkdir()
     (tree / "regress.py").write_text(_PL001_SNIPPET.format(suffix=""))
     out = _run_cli("repro.analysis",
                    [str(tree), "--trace-baseline", "",
-                    "--privacy-baseline", "", "--json-out", "-"],
+                    "--privacy-baseline", "", "--shape-baseline", "",
+                    "--json-out", "-"],
                    cwd=tmp_path)
     assert out.returncode == 1
     head, _, tail = out.stdout.partition("\n}\n")
     data = json.loads(head + "\n}")
-    assert set(data["tools"]) == {"tracelint", "privlint"}
+    assert set(data["tools"]) == {"tracelint", "privlint", "shapelint"}
     assert [f["rule"] for f in data["tools"]["privlint"]["new"]] == \
         ["PL001"]
     assert data["tools"]["tracelint"]["new"] == []

@@ -1,0 +1,252 @@
+"""shapelint: the abstract shape/dtype/padding interpreter for the
+bucketed-padding discipline (docs/STATIC_ANALYSIS.md §Shape lint).
+
+Covers the PR 10 acceptance bars: every golden bad fixture (including
+the verbatim PR 3 slot-padding and PR 9 admit-mask reductions) is
+detected with the right rule code and nothing extra; the known-good
+masked-reduction and host-accounting fixtures produce ZERO findings;
+padding provenance is interprocedural (a padded array reduced by a
+helper in another module is caught *inside the helper*); suppression
+comments, baseline keys, and the committed shape baseline all gate
+correctly; the CLI goes red on an injected SL001 (the CI lint job's
+contract); and the merged ``python -m repro.analysis`` runner reports
+all three linters under one exit code.
+"""
+import json
+import os
+import pathlib
+import shutil
+import subprocess
+import sys
+import textwrap
+from collections import Counter
+
+import pytest
+
+from repro.analysis.report import Baseline
+from repro.analysis.shapelint import run_paths
+from repro.analysis.shaperules import SHAPE_RULES, run_shape_rules
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "shapelint"
+
+# filename -> exactly which rules fire, and how often (no extras!)
+BAD_EXPECT = {
+    "sl001_padded_sum.py": {"SL001": 1},    # the PR 3 padder, verbatim
+    "sl002_mean_over_bucket.py": {"SL002": 2},  # mean + Σvalid denom
+    "sl003_f64_drift.py": {"SL003": 2},     # f64 creation + astype(float)
+    "sl004_bool_arith.py": {"SL004": 2},    # sum(valid) + per_slot*valid
+    "sl005_broadcast.py": {"SL005": 1},     # padded rank-2 × clean rank-1
+    "sl006_unguarded_div.py": {"SL006": 2},  # unguarded Σvalid + log
+    "sl001_interproc.py": {},               # finding lands in the helper
+    "reduce_helper.py": {"SL001": 1},       # ...which is here
+}
+
+
+def _scan_bad():
+    findings, _ = run_paths([str(FIXTURES / "bad")],
+                            source_roots=[str(FIXTURES)])
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures
+# ---------------------------------------------------------------------------
+
+def test_bad_fixtures_detected_with_exact_rules():
+    by_file = {name: Counter() for name in BAD_EXPECT}
+    for f in _scan_bad():
+        by_file[pathlib.Path(f.path).name][f.rule] += 1
+    for name, got in by_file.items():
+        assert got == Counter(BAD_EXPECT[name]), (name, dict(got))
+
+
+def test_bad_fixture_coverage_is_all_rules():
+    covered = {r for expect in BAD_EXPECT.values() for r in expect}
+    assert covered == set(SHAPE_RULES)
+
+
+def test_good_fixtures_zero_false_positives():
+    findings, files = run_paths([str(FIXTURES / "good")],
+                                source_roots=[str(FIXTURES)])
+    assert files == 2
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_provenance_is_interprocedural_across_modules():
+    """The helper that sums its argument is clean in isolation; add the
+    caller module that feeds it a padded buffer and the SL001 appears
+    INSIDE the helper — proof padding provenance crossed the module
+    boundary via the caller-arg → callee-param fixpoint."""
+    alone, _ = run_paths([str(FIXTURES / "bad" / "reduce_helper.py")],
+                         source_roots=[str(FIXTURES)])
+    assert alone == [], [f.render() for f in alone]
+
+    pair, _ = run_paths([str(FIXTURES / "bad" / "reduce_helper.py"),
+                         str(FIXTURES / "bad" / "sl001_interproc.py")],
+                        source_roots=[str(FIXTURES)])
+    assert [(pathlib.Path(f.path).name, f.rule, f.symbol)
+            for f in pair] == [("reduce_helper.py", "SL001", "total")]
+
+
+# ---------------------------------------------------------------------------
+# suppressions, baseline, key stability
+# ---------------------------------------------------------------------------
+
+_SL001_SNIPPET = textwrap.dedent("""
+    import jax.numpy as jnp
+
+
+    def _pad_slots(x, b):
+        return x
+
+
+    def tally(losses, b):
+        padded = _pad_slots(losses, b)
+        return jnp.sum(padded){suffix}
+""")
+
+
+def test_suppression_comment_silences(tmp_path):
+    noisy = tmp_path / "noisy.py"
+    noisy.write_text(_SL001_SNIPPET.format(suffix=""))
+    assert len(run_paths([str(noisy)])[0]) == 1
+
+    quiet = tmp_path / "quiet.py"
+    quiet.write_text(_SL001_SNIPPET.format(
+        suffix="  # shapelint: disable=SL001"))
+    assert run_paths([str(quiet)])[0] == []
+
+    # the wrong code does NOT silence it
+    wrong = tmp_path / "wrong.py"
+    wrong.write_text(_SL001_SNIPPET.format(
+        suffix="  # shapelint: disable=SL004"))
+    assert len(run_paths([str(wrong)])[0]) == 1
+
+
+def test_finding_keys_survive_line_shifts(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(_SL001_SNIPPET.format(suffix=""))
+    before = run_paths([str(f)])[0]
+    f.write_text("# a new header comment\n# another\n\n"
+                 + _SL001_SNIPPET.format(suffix=""))
+    after = run_paths([str(f)])[0]
+    assert [x.key for x in after] == [x.key for x in before]
+    assert after[0].line == before[0].line + 3   # line moved; key did not
+
+
+def test_unknown_rule_codes_refused():
+    from repro.analysis import astgraph
+    graph = astgraph.build_graph([str(FIXTURES / "good")])
+    with pytest.raises(ValueError, match="SL999"):
+        run_shape_rules(graph, rules=["SL999"])
+
+
+def test_committed_shape_baseline_matches_repo(monkeypatch):
+    """The shipped gate: the repo is fully clean — the committed shape
+    baseline is EMPTY and the full source tree lints to zero findings
+    (every historical SL00x was fixed, not baselined)."""
+    bl = Baseline.load(str(REPO / "analysis" / "shape_baseline.json"))
+    assert bl.entries == {}, sorted(bl.entries)
+    monkeypatch.chdir(REPO)   # relative paths, as the CI lint job runs
+    findings, files = run_paths(["src", "benchmarks", "examples"])
+    assert files > 50
+    assert findings == [], [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# the CLI — the CI lint job's exact contract
+# ---------------------------------------------------------------------------
+
+def _run_cli(module, args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", module, *args],
+        env=env, cwd=cwd, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_gate_fails_on_injected_sl001(tmp_path):
+    tree = tmp_path / "pkg"
+    tree.mkdir()
+    shutil.copy(FIXTURES / "good" / "masked_reduction.py", tree)
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", ""], cwd=tmp_path)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+    # inject the SL001 regression: the gate must go red
+    (tree / "regress.py").write_text(_SL001_SNIPPET.format(suffix=""))
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", ""], cwd=tmp_path)
+    assert out.returncode == 1
+    assert "SL001" in out.stdout and "regress.py" in out.stdout
+
+    # accepting into a baseline brings it back to green...
+    bl = tmp_path / "baseline.json"
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", str(bl), "--write-baseline"],
+                   cwd=tmp_path)
+    assert out.returncode == 0
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", str(bl)], cwd=tmp_path)
+    assert out.returncode == 0
+    # ...and a SECOND regression still fails against that baseline
+    (tree / "regress2.py").write_text(_SL001_SNIPPET.format(suffix=""))
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", str(bl)], cwd=tmp_path)
+    assert out.returncode == 1 and "regress2.py" in out.stdout
+
+
+def test_stale_baseline_entries_reported(tmp_path):
+    """A baseline key that no longer matches any finding is flagged, so
+    fixed findings cannot silently linger in the accepted set."""
+    tree = tmp_path / "pkg"
+    tree.mkdir()
+    (tree / "regress.py").write_text(_SL001_SNIPPET.format(suffix=""))
+    bl = tmp_path / "baseline.json"
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", str(bl), "--write-baseline"],
+                   cwd=tmp_path)
+    assert out.returncode == 0
+
+    # fix the finding (slice back to the live prefix): its baseline
+    # entry is now stale and reported
+    (tree / "regress.py").write_text(_SL001_SNIPPET.format(suffix="")
+        .replace("def tally(losses, b):", "def tally(losses, b, p_count):")
+        .replace("jnp.sum(padded)", "jnp.sum(padded[:p_count])"))
+    out = _run_cli("repro.analysis.shapelint",
+                   [str(tree), "--baseline", str(bl)], cwd=tmp_path)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "1 stale baseline" in out.stdout
+
+
+def test_merged_runner_includes_shapelint(tmp_path):
+    """``python -m repro.analysis`` runs shapelint alongside tracelint
+    and privlint; --shape scopes the run to the SL rules only."""
+    tree = tmp_path / "pkg"
+    tree.mkdir()
+    (tree / "regress.py").write_text(_SL001_SNIPPET.format(suffix=""))
+    out = _run_cli("repro.analysis",
+                   [str(tree), "--trace-baseline", "",
+                    "--privacy-baseline", "", "--shape-baseline", "",
+                    "--json-out", "-"],
+                   cwd=tmp_path)
+    assert out.returncode == 1
+    head, _, tail = out.stdout.partition("\n}\n")
+    data = json.loads(head + "\n}")
+    assert set(data["tools"]) == {"tracelint", "privlint", "shapelint"}
+    assert [f["rule"] for f in data["tools"]["shapelint"]["new"]] == \
+        ["SL001"]
+    assert data["tools"]["tracelint"]["new"] == []
+    assert data["tools"]["privlint"]["new"] == []
+    assert "shapelint:" in tail
+
+    # --shape runs shapelint only, and still gates
+    out = _run_cli("repro.analysis",
+                   [str(tree), "--shape", "--shape-baseline", ""],
+                   cwd=tmp_path)
+    assert out.returncode == 1
+    assert "shapelint:" in out.stdout
+    assert "tracelint:" not in out.stdout
+    assert "privlint:" not in out.stdout
